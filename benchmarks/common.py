@@ -1,0 +1,28 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "") not in ("", "0", "false")
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kwargs):
+    """Run fn, return (result, us_per_call)."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def fmt(x, nd=2):
+    if x is None:
+        return "na"
+    if isinstance(x, float):
+        return f"{x:.{nd}f}"
+    return str(x)

@@ -1,0 +1,121 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON artifacts.  Invoked manually; output pasted/included into
+EXPERIMENTS.md (kept as a script so the tables are regenerable).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks.roofline import model_flops  # noqa: E402
+from repro.configs import SHAPES, ASSIGNED_ARCHS, get_config  # noqa: E402
+
+ARCHS = ASSIGNED_ARCHS + ["paper-solar-102b"]
+
+
+def load(variant):
+    p = RESULTS / f"dryrun_{variant}.json"
+    return json.loads(p.read_text()) if p.exists() else {}
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "—"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def dryrun_table():
+    base = load("baseline")
+    out = ["| arch | shape | 16x16 | 2x16x16 | bytes/device (args) | "
+           "gate collectives (16x16) |",
+           "|---|---|---|---|---|---|"]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            k1 = f"{arch}|{shape}|16x16"
+            k2 = f"{arch}|{shape}|2x16x16"
+            r1, r2 = base.get(k1, {}), base.get(k2, {})
+            s1, s2 = r1.get("status", "—"), r2.get("status", "—")
+            if s1 == "SKIP":
+                out.append(f"| {arch} | {shape} | SKIP | SKIP | — | "
+                           f"{r1.get('reason','')[:60]} |")
+                continue
+            mem = r1.get("memory_analysis", {})
+            args = mem.get("argument_size_in_bytes")
+            colls = r1.get("gate_collective_ops", {})
+            coll_s = " ".join(f"{k}:{v}" for k, v in sorted(colls.items()))
+            out.append(f"| {arch} | {shape} | {s1} "
+                       f"({r1.get('gate_compile_s','?')}s) | {s2} "
+                       f"({r2.get('gate_compile_s','?')}s) | "
+                       f"{fmt_bytes(args)} | {coll_s} |")
+    return "\n".join(out)
+
+
+def roofline_table(variant="baseline"):
+    base = load(variant)
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | MODEL_FLOPS | useful ratio | fraction |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = base.get(f"{arch}|{shape}|16x16", {})
+            if rec.get("status") == "SKIP":
+                out.append(f"| {arch} | {shape} | SKIP | | | | | | |")
+                continue
+            r = rec.get("roofline")
+            if not r:
+                continue
+            mf = model_flops(arch, shape)
+            ratio = mf / max(r["flops"], 1)
+            bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            out.append(
+                f"| {arch} | {shape} | {r['compute_s']:.4g} | "
+                f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+                f"**{r['dominant']}** | {mf:.3g} | {ratio:.3f} | "
+                f"{r['compute_s']/bound:.3f} |")
+    return "\n".join(out)
+
+
+def variant_comparison(arch, shape, variants):
+    out = [f"**{arch} × {shape}** (16x16)", "",
+           "| variant | compute (s) | memory (s) | collective (s) | "
+           "temp bytes/dev | dominant |",
+           "|---|---|---|---|---|---|"]
+    for v in variants:
+        rec = load(v).get(f"{arch}|{shape}|16x16", {})
+        r = rec.get("roofline")
+        if not r:
+            out.append(f"| {v} | (not measured) | | | | |")
+            continue
+        temp = rec.get("memory_analysis", {}).get("temp_size_in_bytes")
+        out.append(f"| {v} | {r['compute_s']:.4g} | {r['memory_s']:.4g} | "
+                   f"{r['collective_s']:.4g} | {fmt_bytes(temp)} | "
+                   f"{r['dominant']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### §Dry-run table\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n### §Roofline table (baseline, single pod)\n")
+        print(roofline_table())
+    if which in ("all", "perf"):
+        print("\n### §Perf variant comparisons\n")
+        print(variant_comparison("paper-solar-102b", "train_4k",
+                                 ["naive-port", "baseline", "moe-shard", "loss-chunk", "opt", "opt2"]))
+        print()
+        print(variant_comparison("granite-moe-1b-a400m", "train_4k",
+                                 ["baseline", "moe-shard", "loss-chunk", "opt", "opt2"]))
+        print()
+        print(variant_comparison("mistral-large-123b", "prefill_32k",
+                                 ["naive-attn", "baseline", "bf16-attn", "opt", "opt2"]))

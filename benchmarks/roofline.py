@@ -1,0 +1,100 @@
+"""Roofline table from the dry-run artifacts (§Roofline deliverable).
+
+Reads benchmarks/results/dryrun_<variant>.json (written by
+``python -m repro.launch.dryrun``) and emits, per (arch x shape) cell on the
+single-pod mesh: the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS = 6*N(_active)*D vs compiled HLO flops, and a one-line lever.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+LEVERS = {
+    "compute": "raise arithmetic efficiency: larger per-device batch, "
+               "fused attention kernel, drop remat recompute",
+    "memory": "cut HBM traffic: chunked loss, fp32->bf16 intermediates, "
+              "flash attention (no S^2 materialisation), better fusion",
+    "collective": "cut comms: 2D-sharded all-gathers, overlap FSDP gather "
+                  "with compute, HSDP pod-replication, larger TP blocks",
+}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    return 2.0 * n * shape.global_batch          # decode: one token/request
+
+
+def load(variant: str = "baseline") -> dict:
+    p = RESULTS / f"dryrun_{variant}.json"
+    if not p.exists():
+        return {}
+    return json.loads(p.read_text())
+
+
+def rows(variant: str = "baseline", mesh: str = "16x16"):
+    out = []
+    for key, rec in sorted(load(variant).items()):
+        if rec.get("mesh") != mesh:
+            continue
+        row = {"arch": rec["arch"], "shape": rec["shape"],
+               "status": rec["status"]}
+        if rec["status"] == "OK" and "roofline" in rec:
+            r = rec["roofline"]
+            mf = model_flops(rec["arch"], rec["shape"])
+            row.update({
+                "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"], "dominant": r["dominant"],
+                "model_flops": mf,
+                "useful_ratio": mf / max(r["flops"], 1.0),
+                "bound_s": max(r["compute_s"], r["memory_s"],
+                               r["collective_s"]),
+                "roofline_fraction": r["compute_s"] / max(
+                    r["compute_s"], r["memory_s"], r["collective_s"]),
+                "lever": LEVERS[r["dominant"]],
+                "hlo_flops": r["flops"],
+                "coll_breakdown": r.get("coll_breakdown", {}),
+                "mem_bytes_per_dev": rec.get("memory_analysis", {}).get(
+                    "temp_size_in_bytes"),
+            })
+        elif rec["status"] == "SKIP":
+            row["reason"] = rec.get("reason", "")
+        else:
+            row["error"] = rec.get("error", "")[:120]
+        out.append(row)
+    return out
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rs = rows(args.variant, args.mesh)
+    print("arch,shape,status,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_fraction")
+    for r in rs:
+        if r["status"] == "OK" and "dominant" in r:
+            print(f"{r['arch']},{r['shape']},OK,{r['compute_s']:.4f},"
+                  f"{r['memory_s']:.4f},{r['collective_s']:.4f},"
+                  f"{r['dominant']},{r['useful_ratio']:.3f},"
+                  f"{r['roofline_fraction']:.3f}")
+        else:
+            print(f"{r['arch']},{r['shape']},{r['status']},,,,,,")
+
+
+if __name__ == "__main__":
+    main()

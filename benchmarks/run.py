@@ -1,0 +1,59 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only substr]
+
+Prints ``name,us_per_call,derived`` CSV.  Set REPRO_BENCH_FAST=1 for the
+abbreviated suite (CI).  The roofline table (from the dry-run artifacts) is
+appended when benchmarks/results/dryrun_baseline.json exists.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import bench_kernels, bench_ops
+
+    benches = bench_ops.all_benches() + bench_kernels.all_benches()
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},\"{derived}\"", flush=True)
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{bench.__name__},nan,\"ERROR: {e}\"", flush=True)
+
+    # roofline summary (if the dry-run has produced artifacts)
+    try:
+        from benchmarks import roofline
+        rs = [r for r in roofline.rows() if r.get("status") == "OK"
+              and "dominant" in r]
+        if rs and not args.only:
+            worst = min(rs, key=lambda r: r["roofline_fraction"])
+            best = max(rs, key=lambda r: r["roofline_fraction"])
+            print(f"roofline_cells,{len(rs)},\"best={best['arch']}/"
+                  f"{best['shape']}={best['roofline_fraction']:.2f} "
+                  f"worst={worst['arch']}/{worst['shape']}="
+                  f"{worst['roofline_fraction']:.2f} "
+                  f"(full table: EXPERIMENTS.md §Roofline)\"")
+    except Exception:
+        pass
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

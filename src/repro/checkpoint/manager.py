@@ -1,0 +1,231 @@
+"""Two-phase asynchronous checkpointing — paper §4.2.4 (Fig 9 save path).
+
+Phase 1 (BLOCKING, pauses training): device state -> host staging buffer
+(the paper's pre-allocated /dev/shm region; here host RAM via
+``jax.device_get`` into a reused buffer pool).
+
+Phase 2 (ASYNC, training resumes): staging buffer -> storage through the
+RPC-slot-limited NFS client model (timing) and a real local filesystem
+backend (durability), with per-tensor checksums (the ckpt_pack kernel path
+on TPU; xor-fold in numpy here).
+
+Restore follows the load path: files -> host buffers (verify checksums) ->
+device.  The save cascade ordering (GPU pause -> staging -> write() ->
+writeback -> RPC backlog) is observable through the returned timeline,
+which the checkpoint-path benchmark asserts against Fig 9.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.storage import NFSClientSim, TransferResult
+
+
+# ---------------------------------------------------------------------------
+# (de)serialization of pytrees
+# ---------------------------------------------------------------------------
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def xor_fold_checksum(buf: np.ndarray) -> int:
+    """Block checksum (the numpy oracle of kernels/ckpt_pack)."""
+    raw = buf.tobytes()
+    pad = (-len(raw)) % 8
+    arr = np.frombuffer(raw + b"\x00" * pad, dtype=np.uint64)
+    return int(np.bitwise_xor.reduce(arr)) if arr.size else 0
+
+
+@dataclass
+class SaveTimeline:
+    """Timestamps of the save cascade (relative seconds)."""
+    t_pause: float = 0.0          # training paused (phase-1 start)
+    t_staged: float = 0.0         # device->host copy complete (training resumes)
+    t_write_done: float = 0.0     # write() path complete (real fs)
+    t_rpc_done: float = 0.0       # modeled NFS RPC drain complete
+    bytes_staged: int = 0
+    rpc: Optional[TransferResult] = None
+
+    @property
+    def blocking_s(self) -> float:
+        return self.t_staged - self.t_pause
+
+    @property
+    def async_s(self) -> float:
+        return max(self.t_write_done, self.t_rpc_done) - self.t_staged
+
+    def cascade_ordered(self) -> bool:
+        return self.t_pause <= self.t_staged <= \
+            max(self.t_write_done, self.t_rpc_done) + 1e-9
+
+
+@dataclass
+class CheckpointRecord:
+    step: int
+    path: str
+    bytes: int
+    timeline: SaveTimeline
+    checksums: Dict[str, int] = field(default_factory=dict)
+
+
+class CheckpointManager:
+    def __init__(self, directory, *, keep: int = 3,
+                 nfs: Optional[NFSClientSim] = None,
+                 simulate_rpc: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.nfs = nfs or NFSClientSim()
+        self.simulate_rpc = simulate_rpc
+        self._staging: Dict[str, np.ndarray] = {}   # reused buffer pool
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.records: List[CheckpointRecord] = []
+
+    # ------------------------------------------------------------------
+    # save
+    # ------------------------------------------------------------------
+
+    def save(self, step: int, state, *, blocking: bool = False
+             ) -> CheckpointRecord:
+        """Two-phase save. Returns immediately after phase 1 unless
+        ``blocking``; call ``wait()`` to join phase 2."""
+        self.wait()                       # one in-flight save at a time
+        tl = SaveTimeline(t_pause=time.perf_counter())
+
+        # -- phase 1: device -> staging (blocking; training is paused) --
+        flat = _flatten(state)
+        total = 0
+        for key, arr in flat.items():
+            buf = self._staging.get(key)
+            if buf is None or buf.shape != arr.shape or buf.dtype != arr.dtype:
+                buf = np.empty_like(arr)
+                self._staging[key] = buf
+            np.copyto(buf, arr)
+            total += buf.nbytes
+        tl.bytes_staged = total
+        tl.t_staged = time.perf_counter()
+
+        record = CheckpointRecord(step=step, path=str(self._step_dir(step)),
+                                  bytes=total, timeline=tl)
+
+        # -- phase 2: staging -> storage (async; training resumes) --
+        def flush():
+            try:
+                self._write_files(step, record)
+                tl.t_write_done = time.perf_counter()
+                if self.simulate_rpc:
+                    tl.rpc = self.nfs.checkpoint_save(bytes_per_node=total)
+                tl.t_rpc_done = time.perf_counter()
+                self.records.append(record)
+                self._gc()
+            except BaseException as e:      # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=flush, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+        return record
+
+    def _write_files(self, step: int, record: CheckpointRecord):
+        d = self._step_dir(step)
+        tmp = d.with_suffix(".tmp")
+        tmp.mkdir(parents=True, exist_ok=True)
+        index = {}
+        with open(tmp / "data.bin", "wb") as f:
+            for key, buf in self._staging.items():
+                start = f.tell()
+                f.write(buf.tobytes())
+                csum = xor_fold_checksum(buf)
+                record.checksums[key] = csum
+                index[key] = {"offset": start, "nbytes": buf.nbytes,
+                              "shape": list(buf.shape), "dtype": str(buf.dtype),
+                              "checksum": csum}
+        (tmp / "index.json").write_text(json.dumps(
+            {"step": step, "tensors": index}))
+        if d.exists():
+            import shutil
+            shutil.rmtree(d)
+        tmp.rename(d)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------
+    # restore
+    # ------------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        self.wait()
+        steps = [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                 if p.is_dir()]
+        return max(steps) if steps else None
+
+    def restore(self, step: Optional[int] = None, *, like=None,
+                verify: bool = True):
+        """Load a checkpoint; if ``like`` is given, reassemble that pytree
+        structure (values replaced), else return the flat dict."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self._step_dir(step)
+        meta = json.loads((d / "index.json").read_text())
+        flat: Dict[str, np.ndarray] = {}
+        rpc_bytes = 0
+        with open(d / "data.bin", "rb") as f:
+            for key, info in meta["tensors"].items():
+                f.seek(info["offset"])
+                raw = f.read(info["nbytes"])
+                arr = np.frombuffer(raw, dtype=np.dtype(info["dtype"])) \
+                    .reshape(info["shape"]).copy()
+                if verify and xor_fold_checksum(arr) != info["checksum"]:
+                    raise IOError(f"checksum mismatch for {key} @step {step}")
+                flat[key] = arr
+                rpc_bytes += info["nbytes"]
+        if self.simulate_rpc:
+            self.last_load_rpc = self.nfs.checkpoint_load(
+                bytes_per_node=rpc_bytes)
+        if like is None:
+            return flat, step
+        leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+        new_leaves = []
+        for path, leaf in leaves_with_path[0]:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx",
+                           getattr(p, "name", p)))) for p in path)
+            arr = flat[key]
+            new_leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype)
+                              if hasattr(leaf, "dtype") else arr)
+        return jax.tree_util.tree_unflatten(leaves_with_path[1], new_leaves), step
+
+    # ------------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    def _gc(self):
+        dirs = sorted(self.dir.glob("step_*"))
+        while len(dirs) > self.keep:
+            import shutil
+            shutil.rmtree(dirs.pop(0))

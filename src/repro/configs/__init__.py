@@ -1,0 +1,18 @@
+from repro.configs.base import (
+    ArchConfig, LayerSpec, MoESpec, ShapeConfig, SHAPES,
+    all_configs, get_config, register, cell_is_runnable,
+    ATTN, CROSS_ATTN, MAMBA, RWKV,
+)
+
+ASSIGNED_ARCHS = [
+    "gemma3-27b",
+    "mistral-large-123b",
+    "gemma2-2b",
+    "stablelm-3b",
+    "deepseek-moe-16b",
+    "granite-moe-1b-a400m",
+    "musicgen-large",
+    "llama-3.2-vision-90b",
+    "rwkv6-3b",
+    "jamba-v0.1-52b",
+]

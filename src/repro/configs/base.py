@@ -1,0 +1,267 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is expressed as an ``ArchConfig`` built from a
+repeating *period* of ``LayerSpec`` entries.  The period structure keeps the
+lowered HLO size O(period) instead of O(depth): the layer stack is a
+``lax.scan`` over ``n_periods`` stacked parameter trees, with the (static)
+heterogeneous structure unrolled *inside* the scanned body.  Optional
+``prefix``/``suffix`` layers are unrolled outside the scan for depths that are
+not a multiple of the period (e.g. gemma3's 62 = 10*6 + 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Layer specification
+# ---------------------------------------------------------------------------
+
+# layer kinds
+ATTN = "attn"          # self attention (global or sliding window) + FFN
+CROSS_ATTN = "cross"   # cross attention over image/frame embeddings + FFN
+MAMBA = "mamba"        # S6 selective-scan block + FFN
+RWKV = "rwkv"          # RWKV6 time-mix + channel-mix (its own FFN)
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden size
+    n_shared: int = 0             # always-on shared experts (deepseek style)
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"  # paper §1.1: router dtype mismatch caused
+                                   # instability -> keep router math in fp32
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str = ATTN
+    window: int = 0               # 0 = global attention; >0 = sliding window
+    moe: Optional[MoESpec] = None  # None = dense FFN
+    # mamba-specific
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | audio | vlm | ssm | hybrid
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    period: Tuple[LayerSpec, ...]
+    n_periods: int
+    prefix: Tuple[LayerSpec, ...] = ()
+    suffix: Tuple[LayerSpec, ...] = ()
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    qk_norm: bool = False
+    attn_softcap: float = 0.0     # gemma2: 50.0
+    logit_softcap: float = 0.0    # gemma2: 30.0
+    embed_inputs: bool = True     # False -> frontend stub provides embeddings
+    n_img_tokens: int = 0         # >0 for cross-attention (VLM) archs
+    # rwkv
+    rwkv_head_dim: int = 64
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # citation bookkeeping
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.prefix) + self.n_periods * len(self.period) + len(self.suffix)
+
+    @property
+    def layers(self) -> Tuple[LayerSpec, ...]:
+        return self.prefix + self.period * self.n_periods + self.suffix
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(l.kind in (RWKV, MAMBA) for l in self.layers)
+
+    @property
+    def is_pure_full_attention(self) -> bool:
+        """True when every layer is global full attention (quadratic)."""
+        ks = self.layers
+        return all(l.kind in (ATTN, CROSS_ATTN) for l in ks) and all(
+            l.window == 0 for l in ks if l.kind == ATTN
+        )
+
+    @property
+    def supports_long_context(self) -> bool:
+        """long_500k cells run only for sub-quadratic architectures."""
+        return not self.is_pure_full_attention
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embeddings included once if tied)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total += d  # final norm
+        for l in self.layers:
+            if l.kind in (ATTN, CROSS_ATTN):
+                total += d * self.n_heads * hd            # wq
+                total += 2 * d * self.n_kv_heads * hd     # wk, wv
+                total += self.n_heads * hd * d            # wo
+                total += 2 * d                            # norms
+                if self.qk_norm:
+                    total += 2 * hd
+                total += self._ffn_params(l)
+            elif l.kind == MAMBA:
+                din = l.expand * d
+                dt_rank = max(d // 16, 1)
+                total += d * 2 * din + din * l.d_conv
+                total += din * (dt_rank + 2 * l.d_state) + dt_rank * din
+                total += din * l.d_state + din + din * d
+                total += 2 * d
+                total += self._ffn_params(l)
+            elif l.kind == RWKV:
+                h = d // self.rwkv_head_dim
+                total += 6 * d + 2 * d * 64 + 64 * d      # mus + decay lora
+                total += 5 * d * d + h * self.rwkv_head_dim  # r,k,v,g,o + u
+                total += 2 * d                            # ln_x
+                total += 2 * d * self.d_ff + d * d        # channel mix
+                total += 2 * d                            # norms
+        return total
+
+    def _ffn_params(self, l: LayerSpec) -> int:
+        d = self.d_model
+        if l.moe is None:
+            return 3 * d * self.d_ff
+        m = l.moe
+        dense = 3 * d * m.d_expert * m.n_experts
+        shared = 3 * d * m.d_expert * m.n_shared
+        router = d * m.n_experts
+        return dense + shared + router
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: top_k + shared only)."""
+        total = self.n_params()
+        for l in self.layers:
+            if l.moe is not None:
+                m = l.moe
+                inactive = 3 * self.d_model * m.d_expert * (m.n_experts - m.top_k)
+                total -= inactive
+        return total
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        d = 64
+        small = dict(
+            d_model=d,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            d_ff=128,
+            vocab_size=256,
+            head_dim=16,
+            n_periods=min(self.n_periods, 2),
+            n_img_tokens=8 if self.n_img_tokens else 0,
+            rwkv_head_dim=16,
+            param_dtype="float32",
+            compute_dtype="float32",
+        )
+
+        def shrink(l: LayerSpec) -> LayerSpec:
+            moe = l.moe
+            if moe is not None:
+                moe = dataclasses.replace(
+                    moe,
+                    n_experts=min(moe.n_experts, 4),
+                    top_k=min(moe.top_k, 2),
+                    d_expert=32,
+                    n_shared=min(moe.n_shared, 1),
+                )
+            return dataclasses.replace(
+                l, moe=moe, window=min(l.window, 8) if l.window else 0,
+                d_state=4, d_conv=4, expand=2,
+            )
+
+        small["period"] = tuple(shrink(l) for l in self.period)
+        small["prefix"] = tuple(shrink(l) for l in self.prefix)
+        small["suffix"] = tuple(shrink(l) for l in self.suffix[:1])
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned set — identical for all 10 LM-family archs)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch, shape) is a valid dry-run cell, else a skip reason."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 500k decode requires sub-quadratic attention (DESIGN.md §3)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        _load_all()
+    return _REGISTRY[name]
+
+
+def all_configs() -> dict:
+    if not _REGISTRY:
+        _load_all()
+    return dict(_REGISTRY)
+
+
+def _load_all():
+    # importing the modules populates the registry
+    from repro.configs import (  # noqa: F401
+        gemma3_27b, mistral_large_123b, gemma2_2b, stablelm_3b,
+        deepseek_moe_16b, granite_moe_1b_a400m, musicgen_large,
+        llama32_vision_90b, rwkv6_3b, jamba_v01_52b, paper_solar,
+    )

@@ -1,0 +1,24 @@
+"""deepseek-moe-16b [moe]: 28L d_model=2048 16H (kv=16) d_ff=1408 vocab=102400.
+
+Fine-grained MoE: 2 shared + 64 routed experts, top-6, per-expert d_ff=1408.
+Layer 0 uses a dense FFN (d_ff = 64*1408/... the dense layer uses the full
+10944 hidden in the original; we use 4*1408*2=11264-class scale via the
+documented 1408*8). [arXiv:2401.06066; hf]
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MoESpec, register
+
+MOE = MoESpec(n_experts=64, top_k=6, d_expert=1408, n_shared=2)
+
+CONFIG = register(ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408 * 8,   # dense layer-0 FFN hidden (10944 in HF; 8*d_expert here)
+    vocab_size=102400,
+    prefix=(LayerSpec(kind="attn", window=0, moe=None),),
+    period=(LayerSpec(kind="attn", window=0, moe=MOE),),
+    n_periods=27,
+    source="arXiv:2401.06066; hf",
+))

@@ -1,0 +1,23 @@
+"""gemma2-2b [dense]: 26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000.
+
+local(4096)+global alternating, attention logit softcap 50, final logit
+softcap 30, head_dim=256, tied embeddings. [arXiv:2408.00118; hf]
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(ArchConfig(
+    name="gemma2-2b",
+    family="dense",
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256000,
+    period=(LayerSpec(kind="attn", window=4096), LayerSpec(kind="attn", window=0)),
+    n_periods=13,
+    attn_softcap=50.0,
+    logit_softcap=30.0,
+    tie_embeddings=True,
+    source="arXiv:2408.00118; hf",
+))

@@ -1,0 +1,30 @@
+"""gemma3-27b [dense]: 62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144.
+
+5:1 local:global attention (sliding window 1024), 128k context.
+[hf:google/gemma-3-1b-pt; unverified]
+
+62 layers = 10 periods of (5 local + 1 global) + 2 trailing local layers.
+Gemma3 uses qk-norm, tied embeddings, head_dim=128.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+LOCAL = LayerSpec(kind="attn", window=1024)
+GLOBAL = LayerSpec(kind="attn", window=0)
+
+CONFIG = register(ArchConfig(
+    name="gemma3-27b",
+    family="dense",
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    period=(LOCAL, LOCAL, LOCAL, LOCAL, LOCAL, GLOBAL),
+    n_periods=10,
+    suffix=(LOCAL, LOCAL),
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    qk_norm=True,
+    source="hf:google/gemma-3-1b-pt; unverified",
+))

@@ -1,0 +1,24 @@
+"""granite-moe-1b-a400m [moe]: 24L d_model=1024 16H (GQA kv=8) d_ff=512 vocab=49155.
+
+32 routed experts, top-8, per-expert hidden 512.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+
+Note: vocab 49155 = 3*5*29*113 is divisible by no mesh axis — exercises the
+sharding helper's fallback path (embedding sharded on d_model instead).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MoESpec, register
+
+MOE = MoESpec(n_experts=32, top_k=8, d_expert=512, n_shared=0)
+
+CONFIG = register(ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    period=(LayerSpec(kind="attn", window=0, moe=MOE),),
+    n_periods=24,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base; hf",
+))

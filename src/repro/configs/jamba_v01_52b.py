@@ -1,0 +1,34 @@
+"""jamba-v0.1-52b [hybrid]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536.
+
+Mamba + attention 1:7 interleave, MoE 16 experts top-2 every other layer.
+[arXiv:2403.19887; hf]
+
+32 layers = 4 Jamba blocks of 8; within each block one attention layer and
+seven Mamba layers; MoE replaces the dense FFN on alternate layers
+(positions 1,3,5,7 of each block). The attention layer sits at position 0 of
+the block here (the HF release places it mid-block; position within the
+period does not change parameter count or cost — noted in DESIGN.md §8).
+Sub-quadratic for decode (attention in 4/32 layers) -> runs long_500k.
+Mamba: d_state=16, d_conv=4, expand=2.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MoESpec, register
+
+MOE = MoESpec(n_experts=16, top_k=2, d_expert=14336, n_shared=0)
+
+ATT_D = LayerSpec(kind="attn", window=0, moe=None)
+MAM_D = LayerSpec(kind="mamba", moe=None)
+MAM_E = LayerSpec(kind="mamba", moe=MOE)
+
+CONFIG = register(ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    period=(ATT_D, MAM_E, MAM_D, MAM_E, MAM_D, MAM_E, MAM_D, MAM_E),
+    n_periods=4,
+    source="arXiv:2403.19887; hf",
+))

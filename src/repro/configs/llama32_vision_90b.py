@@ -1,0 +1,29 @@
+"""llama-3.2-vision-90b [vlm]: 100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+
+Cross-attention image layers every 5th layer (20 cross + 80 self = 100).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+Per the assignment, the vision frontend is a STUB: ``input_specs()`` provides
+precomputed image patch embeddings (batch, n_img_tokens, d_model); only the
+transformer backbone (self-attn decoder + gated cross-attn layers) is built.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+SELF = LayerSpec(kind="attn", window=0)
+CROSS = LayerSpec(kind="cross", window=0)
+
+CONFIG = register(ArchConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    period=(SELF, SELF, SELF, SELF, CROSS),
+    n_periods=20,
+    rope_theta=500_000.0,
+    n_img_tokens=1601,
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+))

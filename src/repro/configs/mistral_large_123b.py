@@ -1,0 +1,22 @@
+"""mistral-large-123b [dense]: 88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768.
+
+Pure full attention. [hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+The largest dense arch in the pool — checkpoint-volume stress case for the
+paper's two-phase save path (F2).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(ArchConfig(
+    name="mistral-large-123b",
+    family="dense",
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=32768,
+    period=(LayerSpec(kind="attn", window=0),),
+    n_periods=88,
+    rope_theta=1_000_000.0,
+    source="hf:mistralai/Mistral-Large-Instruct-2407; unverified",
+))

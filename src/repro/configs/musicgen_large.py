@@ -1,0 +1,25 @@
+"""musicgen-large [audio]: 48L d_model=2048 32H (kv=32) d_ff=8192 vocab=2048.
+
+Decoder-only transformer over EnCodec tokens. [arXiv:2306.05284; hf]
+
+Per the assignment, only the transformer BACKBONE is modelled; the EnCodec
+modality frontend is a STUB — ``input_specs()`` provides precomputed frame
+embeddings of shape (batch, seq, d_model) (the sum of the 4 codebook
+embeddings under the delay pattern), and the output head predicts the
+2048-way codebook for stream 0.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    period=(LayerSpec(kind="attn", window=0),),
+    n_periods=48,
+    embed_inputs=False,   # frontend stub provides embeddings
+    source="arXiv:2306.05284; hf",
+))

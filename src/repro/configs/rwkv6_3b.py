@@ -1,0 +1,23 @@
+"""rwkv6-3b [ssm]: 32L d_model=2560 (attn-free) d_ff=8960 vocab=65536.
+
+RWKV-6 "Finch" — linear attention with data-dependent decay.
+[arXiv:2404.05892; hf]
+
+Attention-free: O(1) decode state -> runs the long_500k cell.
+head_dim=64 (40 heads).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(ArchConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    d_model=2560,
+    n_heads=40,          # d_model / rwkv_head_dim
+    n_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65536,
+    period=(LayerSpec(kind="rwkv"),),
+    n_periods=32,
+    rwkv_head_dim=64,
+    source="arXiv:2404.05892; hf",
+))

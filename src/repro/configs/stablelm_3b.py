@@ -1,0 +1,18 @@
+"""stablelm-3b [dense]: 32L d_model=2560 32H (GQA kv=32 = MHA) d_ff=6912 vocab=50304.
+
+[hf:stabilityai/stablelm-2-1_6b; unverified]
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(ArchConfig(
+    name="stablelm-3b",
+    family="dense",
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=6912,
+    vocab_size=50304,
+    period=(LayerSpec(kind="attn", window=0),),
+    n_periods=32,
+    source="hf:stabilityai/stablelm-2-1_6b; unverified",
+))

@@ -1,0 +1,339 @@
+"""End-to-end cluster campaign simulation.
+
+Drives a 63-node training campaign through: the gang scheduler, session
+lifecycle, failure injection, telemetry scraping, XID-classified recovery,
+auto-retry chains, node exclusion, and checkpoint timing — everything the
+paper's §4 measures, in one discrete-time loop (30 s ticks).
+
+Failure semantics (paper §4.3):
+* transient failures (most XID hardware events with spares available, app
+  errors) — the next gang allocation succeeds and the chain recovers;
+* structural failures (software/NCCL-level, license/pool exhaustion) —
+  restarts fail repeatedly at PREPARING until an operator intervenes; this
+  is what made 8/12 of the paper's chains fail and burned a 30-attempt
+  chain (§4.3.5).
+
+Used by: benchmarks (taxonomy / precursor / retry / exclusion / downtime),
+the fault-tolerant training example, and the integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint.youngdaly import MTBF_H_PAPER
+from repro.core.exclusion import ExclusionTracker
+from repro.core.failures import FailureEvent, FailureInjector
+from repro.core.retry import Attempt, Chain, RetryConfig, RetryEngine
+from repro.core.scheduler import GangScheduler
+from repro.core.session import Session, SessionState
+from repro.telemetry.exporters import ExporterSuite, NodeState
+from repro.telemetry.registry import SCRAPE_INTERVAL_S, TimeSeriesStore
+
+TICK_H = SCRAPE_INTERVAL_S / 3600.0
+
+
+@dataclass
+class CampaignConfig:
+    n_nodes: int = 63
+    job_nodes: int = 60
+    duration_h: float = 73 * 24.0
+    mtbf_h: float = MTBF_H_PAPER
+    retry: RetryConfig = field(default_factory=RetryConfig)
+    checkpoint_interval_h: float = 2.23      # 4K phase median
+    checkpoint_save_s: float = 18.0
+    loading_time_h: float = 31.0 / 60.0      # warm-cache restart loading
+    loading_cold_h: float = 58.0 / 60.0      # cold cache (node replaced /
+                                             #   full reboot; paper §4.2.4)
+    # failure-class behaviour
+    p_software_failure: float = 0.5          # NCCL/driver-level (structural)
+    p_transient_retry_fail: float = 0.4      # residual issue on early retries
+    structural_fix_mean_h: float = 5.0       # time until root cause fixed
+    operator_notice_mean_h: float = 1.2      # failing chain noticed & stopped
+    p_manual_misfix: float = 0.4             # operator fix incomplete ->
+                                             #   next chain fails from start
+    manual_response_h_day: float = 0.3
+    manual_response_h_night: float = 1.5
+    repair_time_h: float = 12.0              # node repair turnaround
+    slow_isolation_h: float = 400.0          # fail-slow deliberate isolation
+    telemetry: bool = False
+    seed: int = 0
+
+
+@dataclass
+class CampaignResult:
+    sessions: List[Session]
+    chains: List[Chain]
+    failures: List[FailureEvent]
+    exclusions: ExclusionTracker
+    store: Optional[TimeSeriesStore]
+    downtimes: List[dict]                    # per recovery episode
+    checkpoint_events: int
+    lost_hours: List[float]
+    duration_h: float
+
+    def training_occupancy(self) -> float:
+        run = sum(s.elapsed_running_h(self.duration_h) for s in self.sessions
+                  if s.n_nodes > 1)
+        return min(run / self.duration_h, 1.0)
+
+    def retry_chains(self) -> List[Chain]:
+        """Chains with at least one retry (the paper's unit of analysis)."""
+        return [c for c in self.chains if len(c.attempts) > 1]
+
+
+class ClusterSim:
+    def __init__(self, config: CampaignConfig = CampaignConfig()):
+        self.cfg = config
+        self.rng = np.random.default_rng(config.seed)
+
+    # ------------------------------------------------------------------
+
+    def run(self) -> CampaignResult:
+        cfg = self.cfg
+        rng = self.rng
+        sched = GangScheduler(cfg.n_nodes, spares=cfg.n_nodes - cfg.job_nodes)
+        injector = FailureInjector(n_nodes=cfg.n_nodes, mtbf_h=cfg.mtbf_h,
+                                   seed=cfg.seed)
+        failures = injector.sample(cfg.duration_h)
+        fail_iter = iter(failures)
+        next_fail = next(fail_iter, None)
+
+        exporters = ExporterSuite(cfg.n_nodes, seed=cfg.seed) \
+            if cfg.telemetry else None
+        store = TimeSeriesStore(cfg.n_nodes) if cfg.telemetry else None
+        retry_engine = RetryEngine(cfg.retry)
+        exclusions = ExclusionTracker(cfg.n_nodes)
+
+        sessions: List[Session] = []
+        chains: List[Chain] = []
+        downtimes: List[dict] = []
+        lost_hours: List[float] = []
+        ckpt_events = 0
+        version = 0
+
+        if exporters:
+            for ev in failures:
+                if ev.precursor_lead_h > 0:
+                    exporters.begin_gradual_precursor(
+                        ev.node, ev.time_h - ev.precursor_lead_h,
+                        until_h=ev.time_h + 0.05)
+
+        isolated: Dict[int, str] = {}          # node -> reason
+        repair_until: Dict[int, float] = {}
+
+        # campaign state
+        chain = Chain(task_name=f"b200_v{version}")
+        chains.append(chain)
+        current: Optional[Session] = None
+        prepare_until = 0.0
+        prepare_fails = False                  # structural: PREPARING will fail
+        structural_until = -1.0                # root cause fixed at this time
+        pending_start: Optional[float] = 0.0   # next attempt start time
+        start_is_manual = True                 # operator-initiated attempt
+        last_ckpt = 0.0
+        down_since: Optional[float] = None
+        down_is_auto = True
+        last_fail_hardware = False
+
+        def start_attempt(t: float) -> bool:
+            nonlocal current, prepare_until, prepare_fails
+            s = Session(task_name=chain.task_name, n_nodes=cfg.job_nodes,
+                        created_h=t)
+            if not sched.try_allocate(s, t):
+                # gang unmet: operators readmit an isolated node under
+                # pressure if one is healthy (paper: license case took hours)
+                cand = [i for i, r in isolated.items()
+                        if sched.nodes[i].healthy and i not in repair_until]
+                if cand and rng.random() < 0.5:
+                    sched.readmit(cand[0], t)
+                    isolated.pop(cand[0], None)
+                chain.attempts.append(
+                    Attempt(start_h=t, end_h=t, failure_kind="alloc_fail"))
+                return False
+            s.transition(SessionState.PREPARING, t)
+            sessions.append(s)
+            chain.attempts.append(Attempt(start_h=t))
+            current = s
+            prepare_fails = t < structural_until
+            # residual transient issues can also kill the first retry or two
+            # (node not yet isolated, stale NCCL state) — paper's successful
+            # chains still averaged >1 retry
+            if not prepare_fails and len(chain.attempts) in (2, 3) \
+                    and rng.random() < cfg.p_transient_retry_fail:
+                prepare_fails = True
+            warm = cfg.loading_cold_h if last_fail_hardware \
+                else cfg.loading_time_h
+            dur = (warm + rng.uniform(-0.08, 0.3)) \
+                if not prepare_fails else rng.uniform(0.05, 0.15)
+            prepare_until = t + dur
+            return True
+
+        def fail_session(t: float, kind: str, xid=None):
+            nonlocal current, down_since, last_fail_hardware
+            from repro.core.xid import XID_TABLE
+            last_fail_hardware = kind == "unreachable" or (
+                xid is not None and XID_TABLE[xid].hardware)
+            att = chain.attempts[-1]
+            att.end_h = t
+            att.failure_kind = kind
+            att.xid = xid
+            current.transition(SessionState.ERROR, t, error=f"{kind}:{xid}")
+            sched.release(current, t)
+            exclusions.record_session(current.created_h, t, current.nodes,
+                                      dict(isolated))
+            current = None
+            if down_since is None:
+                down_since = t
+
+        def schedule_next(t: float, xid=None):
+            """Decide auto-retry vs operator handoff after a failure."""
+            nonlocal pending_start, start_is_manual, chain, version, \
+                structural_until, down_is_auto
+            n_attempt = len(chain.attempts)
+            delay_min = retry_engine.next_delay_min(n_attempt, xid=xid)
+            # operators notice a repeatedly-failing chain via alerting and
+            # kill it before max_retries (except off-hours: the paper's
+            # 30-attempt chain ran overnight)
+            noticed = n_attempt >= 3 and rng.random() < (
+                TICK_H * 0 + (cfg.retry.delay_min / 60.0)
+                / max(cfg.operator_notice_mean_h, 1e-6) * 0.5)
+            if cfg.retry.enabled and delay_min is not None \
+                    and n_attempt < cfg.retry.max_retries and not noticed:
+                pending_start = t + delay_min / 60.0
+                start_is_manual = False
+            else:
+                # chain abandoned -> operator intervention
+                if n_attempt >= cfg.retry.max_retries:
+                    chain.stopped_reason = "max retries"
+                version += 1
+                chain = Chain(task_name=f"b200_v{version}")
+                chains.append(chain)
+                pending_start = t + self._manual_delay(t)
+                start_is_manual = True
+                down_is_auto = False
+                # the operator fixes the root cause... usually
+                if rng.random() < cfg.p_manual_misfix:
+                    structural_until = max(
+                        structural_until,
+                        pending_start + rng.exponential(
+                            cfg.structural_fix_mean_h / 2))
+                else:
+                    structural_until = min(structural_until, pending_start)
+
+        t = 0.0
+        while t < cfg.duration_h:
+            # ---- repairs ----
+            for node, until in list(repair_until.items()):
+                if t >= until:
+                    sched.readmit(node, t)
+                    del repair_until[node]
+                    isolated.pop(node, None)
+
+            # ---- start pending attempt ----
+            if current is None and pending_start is not None \
+                    and t >= pending_start:
+                if start_attempt(t):
+                    pending_start = None
+                else:
+                    schedule_next(t)
+
+            # ---- session progress ----
+            if current is not None:
+                if current.state is SessionState.PREPARING \
+                        and t >= prepare_until:
+                    if prepare_fails:       # structural failure at NCCL init
+                        fail_session(t, "software")
+                        schedule_next(t)
+                    else:
+                        current.transition(SessionState.RUNNING, t)
+                        chain.attempts[-1].reached_training = True
+                        last_ckpt = t
+                        if down_since is not None:
+                            downtimes.append({"t": t,
+                                              "hours": t - down_since,
+                                              "auto": down_is_auto})
+                            down_since = None
+                            down_is_auto = True
+                elif current.state is SessionState.RUNNING \
+                        and t - last_ckpt >= cfg.checkpoint_interval_h:
+                    ckpt_events += 1
+                    last_ckpt = t
+                    current.checkpoint_step += 1
+
+            # ---- failures ----
+            fired: List[FailureEvent] = []
+            while next_fail is not None and next_fail.time_h <= t:
+                fired.append(next_fail)
+                next_fail = next(fail_iter, None)
+            for ev in fired:
+                if ev.kind == "fail_slow":
+                    isolated[ev.node] = "performance degradation"
+                    sched.exclude(ev.node, t,
+                                  "fail-slow (deliberate isolation)")
+                    repair_until[ev.node] = t + cfg.slow_isolation_h
+                    continue
+                if ev.is_hardware:
+                    sched.mark_down(ev.node, t, f"xid={ev.xid}"
+                                    if ev.xid else "unreachable")
+                    repair_until[ev.node] = t + cfg.repair_time_h
+                    isolated[ev.node] = "hardware failure"
+                if current is not None and not current.is_terminal \
+                        and ev.node in current.nodes:
+                    if current.state is SessionState.RUNNING:
+                        lost_hours.append(min(t - last_ckpt,
+                                              cfg.checkpoint_interval_h))
+                    # software-level follow-on? (NCCL wedged after the event)
+                    if rng.random() < cfg.p_software_failure:
+                        structural_until = max(
+                            structural_until,
+                            t + rng.exponential(cfg.structural_fix_mean_h))
+                    fail_session(t, ev.kind, xid=ev.xid)
+                    schedule_next(t, xid=ev.xid)
+
+            # ---- telemetry scrape ----
+            if exporters is not None:
+                states = []
+                for i in range(cfg.n_nodes):
+                    in_job = current is not None and i in current.nodes \
+                        and current.state is SessionState.RUNNING
+                    loading = current is not None and i in current.nodes \
+                        and current.state is SessionState.PREPARING
+                    st = NodeState(
+                        training=in_job,
+                        checkpointing=in_job and
+                        (t - last_ckpt) < cfg.checkpoint_save_s / 3600.0,
+                        loading=loading,
+                        down=not sched.nodes[i].healthy,
+                    )
+                    states.append(st)
+                snap = exporters.tick(t, states, fired)
+                store.append(t, snap)
+
+            t += TICK_H
+
+        if current is not None and not current.is_terminal:
+            exclusions.record_session(current.created_h, cfg.duration_h,
+                                      current.nodes, dict(isolated))
+            current.transition(SessionState.TERMINATING, cfg.duration_h)
+            current.transition(SessionState.TERMINATED, cfg.duration_h)
+
+        return CampaignResult(
+            sessions=sessions, chains=chains, failures=failures,
+            exclusions=exclusions, store=store, downtimes=downtimes,
+            checkpoint_events=ckpt_events, lost_hours=lost_hours,
+            duration_h=cfg.duration_h)
+
+    # ------------------------------------------------------------------
+
+    def _manual_delay(self, t_h: float) -> float:
+        """Operator response latency: fast in working hours, slow at night
+        and on weekends (paper Fig 17's 0-53 h manual tail)."""
+        hour_of_day = (t_h % 24.0)
+        day = int(t_h // 24.0) % 7
+        if day >= 5 or hour_of_day < 8 or hour_of_day > 20:
+            return float(self.rng.exponential(self.cfg.manual_response_h_night))
+        return float(self.rng.exponential(self.cfg.manual_response_h_day))

@@ -1,0 +1,99 @@
+"""Multi-layer health checks — paper Appendix A.1 (Table 15).
+
+Each layer has its own probe mechanism and timeout; the health monitor
+aggregates them into a per-node verdict that feeds the scheduler's
+isolation decisions.  ``lspci``-based GPU probing has no TPU analogue — the
+device layer uses a generic liveness probe instead (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, Dict, List, Optional
+
+
+class HealthLayer(Enum):
+    INFRA_KV = "infra_etcd"            # 5.0 s liveness
+    INFRA_CACHE = "infra_valkey"       # 2.0 s per component / 5.0 s total
+    INFRA_DB = "infra_postgres"        # 2-5 s
+    AGENT_RPC = "agent_rpc"            # 5.0 s manager->agent ping
+    AGENT_LIVENESS = "agent_liveness"  # 300 s heartbeat, 600 s sweep
+    SESSION_HANG = "session_hang"      # PREPARING 1 h / TERMINATING 30 min
+    DEVICE = "device"                  # accelerator liveness probe
+    DEVICE_METRICS = "device_metrics"  # exporter thresholds
+
+
+TIMEOUTS_S = {
+    HealthLayer.INFRA_KV: 5.0,
+    HealthLayer.INFRA_CACHE: 5.0,
+    HealthLayer.INFRA_DB: 5.0,
+    HealthLayer.AGENT_RPC: 5.0,
+    HealthLayer.AGENT_LIVENESS: 300.0,
+    HealthLayer.SESSION_HANG: 3600.0,
+    HealthLayer.DEVICE: 10.0,
+    HealthLayer.DEVICE_METRICS: 30.0,
+}
+
+
+@dataclass
+class Probe:
+    layer: HealthLayer
+    fn: Callable[[], bool]
+    timeout_s: float = 0.0
+
+    def __post_init__(self):
+        if not self.timeout_s:
+            self.timeout_s = TIMEOUTS_S[self.layer]
+
+
+@dataclass
+class HealthReport:
+    node: int
+    healthy: bool
+    failing_layers: List[HealthLayer] = field(default_factory=list)
+    latencies_s: Dict[HealthLayer, float] = field(default_factory=dict)
+
+
+class HealthMonitor:
+    """Aggregates per-layer probes into per-node verdicts."""
+
+    def __init__(self):
+        self.probes: Dict[int, List[Probe]] = {}
+
+    def register(self, node: int, probe: Probe):
+        self.probes.setdefault(node, []).append(probe)
+
+    def check(self, node: int) -> HealthReport:
+        failing: List[HealthLayer] = []
+        lats: Dict[HealthLayer, float] = {}
+        for probe in self.probes.get(node, []):
+            t0 = time.perf_counter()
+            try:
+                ok = probe.fn()
+            except Exception:
+                ok = False
+            dt = time.perf_counter() - t0
+            lats[probe.layer] = dt
+            if not ok or dt > probe.timeout_s:
+                failing.append(probe.layer)
+        return HealthReport(node=node, healthy=not failing,
+                            failing_layers=failing, latencies_s=lats)
+
+    def sweep(self) -> List[HealthReport]:
+        return [self.check(n) for n in sorted(self.probes)]
+
+
+def device_liveness_probe() -> bool:
+    """Generic accelerator liveness: can we enumerate devices and run a
+    trivial computation?  (The lspci rev-ff check's portable analogue.)"""
+    import jax
+    import jax.numpy as jnp
+    try:
+        devs = jax.devices()
+        if not devs:
+            return False
+        x = jnp.ones((8,))
+        return bool(jnp.sum(x) == 8.0)
+    except Exception:
+        return False

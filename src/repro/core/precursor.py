@@ -1,0 +1,176 @@
+"""Multi-signal failure (precursor) detection — paper F1 / §4.1.
+
+Because all N nodes execute the same SPMD program, anomaly detection is
+framed as deviation from the peer distribution: at each scrape tick, for each
+metric, compute a robust z-score of every node against the other N-1 nodes
+(median/MAD — resistant to the faulty node polluting the baseline).  A node
+alarms when >= ``min_signals`` metrics exceed ``z_threshold`` simultaneously
+for ``persistence`` consecutive ticks.
+
+The paper's result with this family of detectors: 10/10 detection at the XID
+point, 2/10 pre-XID, ~0.84 false positives/day — and *no single metric is
+consistently dominant*, which is why the vote is across the whole metric set.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.telemetry.registry import SCRAPE_INTERVAL_S, TimeSeriesStore
+
+
+@dataclass(frozen=True)
+class DetectorConfig:
+    z_threshold: float = 6.0
+    min_signals: int = 4          # metrics that must agree (multi-signal vote)
+    persistence: int = 1          # consecutive ticks before alarming
+    exclude_metrics: tuple = ("DCGM_FI_DEV_XID_ERRORS",)  # no label leakage
+    # peer cohort: only nodes actively running the same SPMD workload are
+    # comparable (paper: "the remaining 59 healthy nodes"); idle spares and
+    # operator-isolated nodes would otherwise alarm constantly.
+    activity_metric: str = "DCGM_FI_DEV_GPU_UTIL"
+    activity_threshold: float = 30.0
+
+
+@dataclass
+class Alarm:
+    tick: int
+    time_h: float
+    node: int
+    n_signals: int
+    top_metrics: List[Tuple[str, float]]   # (metric, |z|) strongest first
+
+
+def robust_peer_z(values: np.ndarray) -> np.ndarray:
+    """Per-node robust z-score vs the peer distribution at one tick.
+
+    values: (n_nodes,).  Uses median/MAD of all nodes (the faulty node is
+    <=1/N of the sample, so median/MAD are stable).
+    """
+    med = np.median(values)
+    mad = np.median(np.abs(values - med))
+    scale = 1.4826 * mad
+    if scale < 1e-12:
+        scale = max(1e-12, 1e-6 * max(abs(med), 1.0))
+    return (values - med) / scale
+
+
+class PrecursorDetector:
+    def __init__(self, config: DetectorConfig = DetectorConfig()):
+        self.config = config
+
+    def scan(self, store: TimeSeriesStore) -> List[Alarm]:
+        """Run detection over a full telemetry store; returns alarms."""
+        cfg = self.config
+        names = [n for n in store.names if n not in cfg.exclude_metrics]
+        ticks = store.times()
+        n_ticks = len(ticks)
+        n_nodes = store.n_nodes
+
+        # active cohort: node was running the workload at the PREVIOUS tick
+        # (so the failure tick itself — where it drops out — stays eligible)
+        if cfg.activity_metric in store.data:
+            util = store.series(cfg.activity_metric)
+            act_now = util > cfg.activity_threshold
+            active = np.vstack([act_now[:1], act_now[:-1]])
+        else:
+            active = np.ones((n_ticks, n_nodes), dtype=bool)
+
+        hit_count = np.zeros((n_ticks, n_nodes), dtype=np.int32)
+        top: List[List[List[Tuple[str, float]]]] = \
+            [[[] for _ in range(n_nodes)] for _ in range(n_ticks)]
+        for name in names:
+            series = store.series(name)               # (n_ticks, n_nodes)
+            masked = np.where(active, series, np.nan)
+            import warnings as _w
+            with np.errstate(all="ignore"), _w.catch_warnings():
+                _w.simplefilter("ignore", RuntimeWarning)
+                med = np.nanmedian(masked, axis=1, keepdims=True)
+                mad = np.nanmedian(np.abs(masked - med), axis=1, keepdims=True)
+            med = np.nan_to_num(med)
+            mad = np.nan_to_num(mad)
+            scale = 1.4826 * mad
+            floor = np.maximum(1e-12, 1e-6 * np.maximum(np.abs(med), 1.0))
+            scale = np.where(scale < 1e-12, floor, scale)
+            z = np.abs((series - med) / scale)
+            exceed = (z > cfg.z_threshold) & active
+            hit_count += exceed.astype(np.int32)
+            for t, node in zip(*np.nonzero(exceed)):
+                top[t][node].append((name, float(z[t, node])))
+
+        alarms: List[Alarm] = []
+        streak = np.zeros(n_nodes, dtype=np.int32)
+        for t in range(n_ticks):
+            over = hit_count[t] >= cfg.min_signals
+            streak = np.where(over, streak + 1, 0)
+            for node in np.nonzero(streak == cfg.persistence)[0]:
+                metrics = sorted(top[t][node], key=lambda kv: -kv[1])[:5]
+                alarms.append(Alarm(tick=t, time_h=ticks[t], node=int(node),
+                                    n_signals=int(hit_count[t, node]),
+                                    top_metrics=metrics))
+        return alarms
+
+
+@dataclass
+class EvalResult:
+    n_failures: int
+    detected: int
+    pre_xid: int
+    false_positives: int
+    fp_per_day: float
+    detection_lead_h: List[float]
+    per_failure: List[dict] = field(default_factory=list)
+
+    @property
+    def detection_rate(self) -> float:
+        return self.detected / max(self.n_failures, 1)
+
+    @property
+    def pre_xid_rate(self) -> float:
+        return self.pre_xid / max(self.n_failures, 1)
+
+
+def evaluate(alarms: Sequence[Alarm], failures, duration_h: float,
+             match_window_h: float = 0.5) -> EvalResult:
+    """Score alarms against ground-truth failure events.
+
+    detected  : an alarm on the failing node within +-match_window of the event
+    pre_xid   : the alarm strictly precedes the event time
+    false pos : alarms on healthy nodes / outside any event window, deduped
+                per (node, hour) so a persisting anomaly counts once
+    """
+    detected = pre = 0
+    leads: List[float] = []
+    per_failure = []
+    matched_alarm_ids = set()
+    for ev in failures:
+        window = [(i, a) for i, a in enumerate(alarms)
+                  if a.node == ev.node
+                  and ev.time_h - max(match_window_h, ev.precursor_lead_h + 0.1)
+                  <= a.time_h <= ev.time_h + match_window_h]
+        ok = len(window) > 0
+        first = min((a.time_h for _, a in window), default=None)
+        is_pre = ok and first < ev.time_h - 1e-9
+        detected += ok
+        pre += is_pre
+        if ok:
+            leads.append(ev.time_h - first)
+            matched_alarm_ids.update(i for i, _ in window)
+        per_failure.append({
+            "node": ev.node, "time_h": ev.time_h, "xid": getattr(ev, "xid", None),
+            "detected": ok, "pre_xid": bool(is_pre),
+            "lead_h": (ev.time_h - first) if ok else None,
+        })
+
+    fp_keys = set()
+    for i, a in enumerate(alarms):
+        if i in matched_alarm_ids:
+            continue
+        fp_keys.add((a.node, int(a.time_h)))   # dedupe per node-hour
+    n_fp = len(fp_keys)
+    return EvalResult(
+        n_failures=len(list(failures)), detected=detected, pre_xid=pre,
+        false_positives=n_fp, fp_per_day=n_fp / max(duration_h / 24.0, 1e-9),
+        detection_lead_h=leads, per_failure=per_failure)

@@ -1,0 +1,140 @@
+"""Per-rank sharded data pipeline — the §3.5 fix, built in.
+
+The paper's cross-organizational debugging case: training init took >8 h
+because 60 nodes issued fragmented small random I/O against shared files,
+saturating the storage metadata service; per-rank file sharding (Arrow files
+partitioned by rank) + readahead cut it to <8 min.
+
+This pipeline therefore writes ONE shard file per data-parallel rank at
+dataset build time, and each rank streams only its own files sequentially.
+``benchmarks/bench_io_sharding`` quantifies the contention cliff of the
+shared-file layout vs this one using the metadata-service model below.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    tokens_per_shard: int = 1 << 22
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# dataset build: one file per rank (the fix)
+# ---------------------------------------------------------------------------
+
+def build_sharded_dataset(root, n_ranks: int, cfg: DataConfig,
+                          n_tokens_per_rank: Optional[int] = None) -> dict:
+    """Materialise a synthetic token dataset as per-rank shard files."""
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    n_tokens_per_rank = n_tokens_per_rank or cfg.tokens_per_shard
+    manifest = {"n_ranks": n_ranks, "seq_len": cfg.seq_len,
+                "vocab_size": cfg.vocab_size, "files": {}}
+    for rank in range(n_ranks):
+        rng = np.random.default_rng(cfg.seed * 100_003 + rank)
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=n_tokens_per_rank, dtype=np.int32)
+        f = root / f"shard_{rank:05d}.bin"
+        toks.tofile(f)
+        manifest["files"][str(rank)] = f.name
+    (root / "manifest.json").write_text(json.dumps(manifest))
+    return manifest
+
+
+class RankShardReader:
+    """Sequential reader over this rank's own shard (readahead-friendly)."""
+
+    def __init__(self, root, rank: int, cfg: DataConfig,
+                 batch_per_rank: int):
+        self.root = Path(root)
+        manifest = json.loads((self.root / "manifest.json").read_text())
+        if str(rank) not in manifest["files"]:
+            raise KeyError(f"rank {rank} has no shard "
+                           f"(built for {manifest['n_ranks']} ranks)")
+        self.tokens = np.fromfile(self.root / manifest["files"][str(rank)],
+                                  dtype=np.int32)
+        self.cfg = cfg
+        self.batch = batch_per_rank
+        self._pos = 0
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        need = self.batch * (self.cfg.seq_len + 1)
+        if self._pos + need > len(self.tokens):
+            self._pos = 0                       # wrap (epoch boundary)
+        flat = self.tokens[self._pos:self._pos + need]
+        self._pos += need
+        arr = flat.reshape(self.batch, self.cfg.seq_len + 1)
+        return {"tokens": arr[:, :-1].copy(), "labels": arr[:, 1:].copy()}
+
+
+def synthetic_stream(cfg: DataConfig, batch: int, seed: int = 0
+                     ) -> Iterator[dict]:
+    """In-memory fallback stream (tests / tiny examples)."""
+    rng = np.random.default_rng(seed)
+    while True:
+        arr = rng.integers(0, cfg.vocab_size,
+                           size=(batch, cfg.seq_len + 1), dtype=np.int32)
+        yield {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# metadata-service contention model (the §3.5 bottleneck, quantified)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MetadataServiceModel:
+    """Distributed-FS metadata service under concurrent open/lookup load.
+
+    Service rate degrades superlinearly once concurrent lookups exceed
+    capacity (lock contention on the shared namespace — what VAST/Upstage/
+    Lablup diagnosed jointly).  Defaults roughly calibrated so that the
+    shared-small-file layout at 60 nodes lands at the paper's >8 h init
+    while per-rank sharding lands at ~8 min.
+    """
+    base_lookup_s: float = 0.002          # uncontended metadata op
+    capacity_ops_s: float = 8_000.0       # aggregate service capacity
+    contention_exp: float = 2.0           # superlinear penalty beyond capacity
+
+    def lookup_time_s(self, concurrent_ops_s: float) -> float:
+        if concurrent_ops_s <= self.capacity_ops_s:
+            return self.base_lookup_s
+        over = concurrent_ops_s / self.capacity_ops_s
+        return self.base_lookup_s * (over ** self.contention_exp)
+
+
+def init_time_model(n_nodes: int, files_per_node: int, ops_per_file: int,
+                    data_bytes_per_node: float,
+                    seq_read_bw: float = 4.5e9,
+                    frag_read_bw: float = 0.35e9,
+                    md: MetadataServiceModel = MetadataServiceModel(),
+                    sharded: bool = True) -> float:
+    """Initialization wall-time (s) for one node under either layout.
+
+    shared layout: every node touches every file (n_nodes x files metadata
+    storm) and reads are fragmented random I/O;
+    sharded layout: each node opens only its own files and streams.
+    """
+    if sharded:
+        n_lookups = files_per_node * ops_per_file
+        rate = n_nodes * n_lookups / 60.0           # spread over a minute
+        md_time = n_lookups * md.lookup_time_s(rate)
+        return md_time + data_bytes_per_node / seq_read_bw
+    total_files = files_per_node * n_nodes          # the shared pool
+    n_lookups = total_files * ops_per_file          # every node walks all
+    rate = n_nodes * n_lookups / 60.0
+    md_time = n_lookups * md.lookup_time_s(rate)
+    return md_time + data_bytes_per_node / frag_read_bw

@@ -1,0 +1,102 @@
+"""Trace-time activation-sharding context.
+
+Model code is mesh-agnostic; the step builders install this context while
+tracing under a mesh, and the model calls ``shard_batch`` on its residual
+stream.  Without a context the calls are no-ops (CPU smoke tests,
+single-device runs).
+
+Why this exists: GSPMD propagation loses the batch sharding through the
+vocab-sharded embedding gather (measured: attention ran with batch
+replicated over the ``data`` axis -> 16x FLOP inflation; EXPERIMENTS.md
+§Perf iteration 2), so the residual stream is re-pinned after embedding and
+at each period boundary.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_tls = threading.local()
+
+
+class ActivationSharding:
+    def __init__(self, batch_axes: Tuple[str, ...], batch_size: int,
+                 model_axis: str, model_size: int, mesh=None):
+        self.batch_axes = batch_axes
+        self.batch_size = batch_size          # product of batch axis sizes
+        self.model_axis = model_axis
+        self.model_size = model_size
+        self.mesh = mesh                      # for explicit shard_map users
+
+    @property
+    def batch_spec_entry(self):
+        return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+
+
+def current() -> Optional[ActivationSharding]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextmanager
+def activation_sharding(rules):
+    """``rules``: a distributed.sharding.ShardingRules instance."""
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = ActivationSharding(
+        batch_axes=rules.batch_axes, batch_size=rules.batch_size_axes,
+        model_axis="model", model_size=rules.model_size, mesh=rules.mesh)
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def shard_batch(x, batch_dim: int = 0, model_dim: Optional[int] = None):
+    """Pin ``batch_dim`` to the batch axes (divisibility-checked); optionally
+    pin ``model_dim`` to the model axis.  batch=1 inputs fall back to
+    sharding dim 1 (sequence/context parallelism)."""
+    ctx = current()
+    if ctx is None or ctx.batch_size <= 1:
+        return x
+    spec = [None] * x.ndim
+    placed = False
+    if x.shape[batch_dim] % ctx.batch_size == 0:
+        spec[batch_dim] = ctx.batch_spec_entry
+        placed = True
+    elif x.ndim >= 2 and batch_dim == 0 \
+            and x.shape[1] % ctx.batch_size == 0 and x.shape[1] > 1:
+        spec[1] = ctx.batch_spec_entry
+        placed = True
+    if model_dim is not None and ctx.model_size > 1 \
+            and x.shape[model_dim] % ctx.model_size == 0 \
+            and spec[model_dim] is None:
+        spec[model_dim] = ctx.model_axis
+        placed = True
+    if not placed:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_experts(x, expert_dim: int = 0, token_dim: int = 1):
+    """Pin MoE dispatch tensors: experts -> model axis (EP), capacity
+    tokens -> batch axes.  Without this GSPMD replicates the (E, C, d)
+    dispatch across the mesh (measured: 16 TB/device/step of all-gather on
+    the 102B MoE — EXPERIMENTS.md §Perf iteration 3)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = [None] * x.ndim
+    placed = False
+    if ctx.model_size > 1 and x.shape[expert_dim] % ctx.model_size == 0:
+        spec[expert_dim] = ctx.model_axis
+        placed = True
+    if token_dim is not None and ctx.batch_size > 1 \
+            and x.shape[token_dim] % ctx.batch_size == 0:
+        spec[token_dim] = ctx.batch_spec_entry
+        placed = True
+    if not placed:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

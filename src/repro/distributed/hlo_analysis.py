@@ -1,0 +1,172 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``cost_analysis()`` provides HLO_FLOPs and HLO_bytes; collective traffic is
+NOT in cost_analysis, so we parse the (post-SPMD, per-device) HLO text and
+sum the result-shape bytes of every collective op, bucketed by kind.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+# one shape literal:  bf16[8,128]{1,0:T(8,128)}  /  f32[]  /  u32[4]
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# an HLO instruction line: "  %name = <result-type> op-name(...)"
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+([a-z0-9\-]+)\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes by collective kind from (post-SPMD) HLO text."""
+    out: Dict[str, int] = {}
+    for m in _INSTR_RE.finditer(hlo_text):
+        result_type, op = m.group(1), m.group(2)
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES:
+            out[base] = out.get(base, 0) + _shape_bytes(result_type)
+    return out
+
+
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9,{} ]*)\}\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](T\(([0-9,]+)\))?")
+
+
+def _iota_group_members(g, rows, cols, transposed):
+    """Members of group ``g`` for iota replica_groups [rows,cols]<=[N]."""
+    if not transposed:
+        return range(g * cols, (g + 1) * cols)
+    return range(g, rows * cols, rows)
+
+
+def _spans_pods(line: str, pod_size: int) -> bool:
+    """Whether a collective's replica groups cross the pod boundary."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        rows, cols = int(m.group(1)), int(m.group(2))
+        transposed = m.group(4) is not None
+        for g in range(rows):
+            pods = {d // pod_size
+                    for d in _iota_group_members(g, rows, cols, transposed)}
+            if len(pods) > 1:
+                return True
+        return False
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            devs = [int(x) for x in grp.replace("{", "").replace("}", "")
+                    .split(",") if x.strip()]
+            if len({d // pod_size for d in devs}) > 1:
+                return True
+        return False
+    return False
+
+
+def collective_bytes_by_span(hlo_text: str, pod_size: int = 256
+                             ) -> Dict[str, int]:
+    """Per-device collective bytes split into in-pod vs cross-pod traffic
+    (cross-pod = any replica group spans the pod boundary).  Quantifies the
+    HSDP locality advantage that raw byte totals hide."""
+    out = {"in_pod": 0, "cross_pod": 0}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in _COLLECTIVES:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        key = "cross_pod" if _spans_pods(line, pod_size) else "in_pod"
+        out[key] += nbytes
+    return out
+
+
+def count_collective_ops(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for m in _INSTR_RE.finditer(hlo_text):
+        op = m.group(2)
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES:
+            out[base] = out.get(base, 0) + 1
+    return out
+
+
+@dataclass
+class Roofline:
+    """Three-term roofline for one (arch x shape x mesh) cell."""
+    flops: float                 # whole-module HLO FLOPs (global)
+    hbm_bytes: float             # whole-module bytes accessed (global)
+    coll_bytes_per_device: float
+    chips: int
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        # per-device bytes over the chip's ICI link bandwidth == the
+        # prompt's collective_bytes/(chips*link_bw) with cluster-total bytes
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "coll_breakdown": self.coll_breakdown,
+        }

@@ -1,0 +1,206 @@
+"""Sharding rules: FSDP x TP x (HSDP | pod-FSDP).
+
+Layout (DESIGN.md §6):
+* ``model`` axis (16): tensor parallelism — Megatron-style column/row split
+  for attention and FFN weights, expert parallelism for MoE stacks, vocab
+  parallelism for embeddings.
+* ``data`` axis (16): FSDP (ZeRO-3) parameter/optimizer sharding + batch DP.
+* ``pod``  axis (2, multi-pod only): HSDP replica axis — parameters are
+  REPLICATED across pods (paper-faithful: Solar Open ran HSDP sharding-group
+  x replicas, Table 5), gradients all-reduce across pods.  ``fsdp_pods=True``
+  extends FSDP across the pod axis instead (beyond-paper lever).
+
+All helpers are divisibility-aware with graceful fallback (e.g. granite's
+vocab 49155 shards on d_model instead) so every (arch x shape x mesh) cell
+lowers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Row-parallel leaves: contraction (input) dim carries the model axis so the
+# matmul output needs a single psum and no resharding of the input.
+_ROW_PARALLEL = {"wo", "w_down", "out_proj", "Wo", "cm_Wv"}
+# Never shard (small vectors/scalars whose gather cost exceeds their size).
+_REPLICATED = {"first", "gate_attn", "gate_ffn", "dt_bias", "conv_b", "D"}
+
+
+def _path_names(path) -> list:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(str(e.idx))
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return names
+
+
+def _prod(xs):
+    return math.prod(xs) if xs else 1
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, *, fsdp_pods: bool = False):
+        self.mesh = mesh
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.model_axis = "model"
+        self.model_size = sizes.get("model", 1)
+        if "pod" in sizes and fsdp_pods:
+            self.data_axes: tuple = ("pod", "data")
+        else:
+            self.data_axes = ("data",)
+        self.data_size = _prod([sizes[a] for a in self.data_axes])
+        self.batch_axes: tuple = tuple(a for a in ("pod", "data")
+                                       if a in sizes)
+        self.batch_size_axes = _prod([sizes[a] for a in self.batch_axes])
+
+    # -- parameters --------------------------------------------------------
+
+    def param_pspec(self, path, leaf) -> P:
+        names = _path_names(path)
+        shape = leaf.shape
+        ndim = len(shape)
+        spec: list = [None] * ndim
+        leaf_name = names[-1] if names else ""
+        if ndim == 0 or leaf_name in _REPLICATED:
+            return P(*spec)
+
+        # pick the model (TP/EP) dim
+        model_dim: Optional[int] = None
+        if "moe" in names and ndim == 3:
+            if shape[0] % self.model_size == 0:
+                model_dim = 0            # expert parallelism
+        if model_dim is None and ndim >= 2:
+            if leaf_name in _ROW_PARALLEL:
+                prefs = list(range(ndim - 1)) + [ndim - 1]
+            elif leaf_name == "embed":
+                prefs = [0, 1]           # vocab-parallel, fallback d_model
+            else:
+                prefs = [ndim - 1] + list(range(ndim - 1))
+            for d in prefs:
+                if shape[d] % self.model_size == 0:
+                    model_dim = d
+                    break
+        if model_dim is not None:
+            spec[model_dim] = self.model_axis
+
+        # FSDP dim: first remaining divisible dim
+        if ndim >= 2 or (ndim == 1 and shape[0] >= 1 << 16):
+            for d in range(ndim):
+                if d == model_dim:
+                    continue
+                if shape[d] % self.data_size == 0:
+                    spec[d] = self.data_axes if len(self.data_axes) > 1 \
+                        else self.data_axes[0]
+                    break
+        return P(*spec)
+
+    def params_shardings(self, params_shapes):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: NamedSharding(self.mesh,
+                                             self.param_pspec(path, leaf)),
+            params_shapes)
+
+    def opt_shardings(self, opt_shapes, params_shapes):
+        """Optimizer states mirror parameter sharding; scalars replicated."""
+        param_sh = self.params_shardings(params_shapes)
+
+        def match(path, leaf):
+            if len(leaf.shape) == 0:
+                return NamedSharding(self.mesh, P())
+            return NamedSharding(self.mesh, self.param_pspec(path[1:], leaf))
+        # opt state tree = AdamWState(step, mu, nu); mu/nu mirror params.
+        return jax.tree_util.tree_map_with_path(match, opt_shapes)
+
+    # -- batches -----------------------------------------------------------
+
+    def batch_pspec(self, shape) -> P:
+        spec: list = [None] * len(shape)
+        if shape and shape[0] % self.batch_size_axes == 0:
+            spec[0] = self.batch_axes if len(self.batch_axes) > 1 \
+                else self.batch_axes[0]
+        elif len(shape) >= 2 and shape[1] % self.batch_size_axes == 0:
+            spec[1] = self.batch_axes if len(self.batch_axes) > 1 \
+                else self.batch_axes[0]   # batch=1 long-context: shard seq
+        # last dim (d_model / vocab) over model when divisible
+        if len(shape) >= 3 and shape[-1] % self.model_size == 0:
+            spec[-1] = self.model_axis
+        return P(*spec)
+
+    def batch_shardings(self, batch_shapes):
+        return jax.tree.map(
+            lambda leaf: NamedSharding(self.mesh, self.batch_pspec(leaf.shape)),
+            batch_shapes)
+
+    # -- kv / recurrent caches ----------------------------------------------
+
+    def cache_pspec(self, path, leaf) -> P:
+        names = _path_names(path)
+        shape = leaf.shape
+        ndim = len(shape)
+        off = 1 if "period" in names else 0   # stacked (n_periods, ...) leaves
+        spec: list = [None] * ndim
+        leaf_name = names[-1] if names else ""
+
+        batch_axes = self.batch_axes if len(self.batch_axes) > 1 \
+            else self.batch_axes[0]
+        b_dim = off + 0
+
+        if leaf_name in ("k", "v") and ndim >= off + 4:
+            # KV cache (B, S, n_kv, head_dim): batch -> data axes; model axis
+            # on kv-heads when divisible, otherwise on the SEQUENCE dim
+            # (flash-decoding split — sharding head_dim caused involuntary
+            # full rematerialization in the SPMD partitioner; measured).
+            seq_dim, kv_dim = off + 1, off + 2
+            if shape[b_dim] % self.batch_size_axes == 0:
+                spec[b_dim] = batch_axes
+                if shape[kv_dim] % self.model_size == 0:
+                    spec[kv_dim] = self.model_axis
+                elif shape[seq_dim] % self.model_size == 0 \
+                        and shape[seq_dim] >= 4 * self.model_size:
+                    spec[seq_dim] = self.model_axis
+            else:
+                # batch=1 long-context: context-parallel cache
+                if shape[kv_dim] % self.model_size == 0:
+                    if shape[seq_dim] % self.batch_size_axes == 0:
+                        spec[seq_dim] = batch_axes
+                    spec[kv_dim] = self.model_axis
+                elif shape[seq_dim] % (self.batch_size_axes
+                                       * self.model_size) == 0:
+                    axes = tuple(self.batch_axes) + (self.model_axis,)
+                    spec[seq_dim] = axes
+                elif shape[seq_dim] % self.batch_size_axes == 0:
+                    spec[seq_dim] = batch_axes
+            return P(*spec)
+
+        if shape[b_dim] % self.batch_size_axes == 0:
+            spec[b_dim] = batch_axes
+
+        model_dim_by_leaf = {
+            "wkv": off + 1,                    # rwkv head dim
+            "shift": off + 1, "cm": off + 1,   # d_model
+            "conv": off + 2, "ssm": off + 1,   # d_inner
+        }
+        d = model_dim_by_leaf.get(leaf_name)
+        if d is not None and d < ndim and shape[d] % self.model_size == 0 \
+                and spec[d] is None:
+            spec[d] = self.model_axis
+        return P(*spec)
+
+    def cache_shardings(self, cache_shapes):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: NamedSharding(self.mesh,
+                                             self.cache_pspec(path, leaf)),
+            cache_shapes)
+
+    # -- scalars -------------------------------------------------------------
+
+    def replicated(self):
+        return NamedSharding(self.mesh, P())

@@ -1,0 +1,33 @@
+"""jit'd wrapper: flat-tensor pad/reshape + dispatch for ckpt_pack."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ckpt_pack.kernel import ckpt_pack_blocks
+
+BLOCK = 2048
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def ckpt_pack(x, *, block: int = BLOCK, interpret: bool = None):
+    """Pack a flat fp32 tensor for the checkpoint write path.
+
+    Returns (bf16 payload (n,), checksums (n_blocks,)); ``n`` is padded up
+    to a block multiple (zero pad — checksum covers the padded layout).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    y, chk = ckpt_pack_blocks(blocks, interpret=interpret)
+    return y.reshape(-1), chk.reshape(-1)

@@ -1,0 +1,29 @@
+"""Pure-numpy/jnp oracle for ckpt_pack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ckpt_pack_blocks_ref(x):
+    """x: (n_blocks, block) float32 -> (bf16, uint32 (n_blocks, 1))."""
+    y = x.astype(jnp.bfloat16)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    chk = jnp.sum(bits, axis=1, keepdims=True, dtype=jnp.uint32)
+    return y, chk
+
+
+def ckpt_pack_numpy(x: np.ndarray):
+    """Host-side oracle (numpy, wrapping uint32 arithmetic)."""
+    bits = x.view(np.uint32).reshape(x.shape)
+    chk = np.zeros((x.shape[0], 1), np.uint32)
+    for i in range(x.shape[0]):
+        acc = np.uint32(0)
+        with np.errstate(over="ignore"):
+            for wrd in bits[i]:
+                acc = np.uint32((int(acc) + int(wrd)) & 0xFFFFFFFF)
+        chk[i, 0] = acc
+    import ml_dtypes  # shipped with jax
+    y = x.astype(ml_dtypes.bfloat16)
+    return y, chk

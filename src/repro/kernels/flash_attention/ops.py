@@ -1,0 +1,36 @@
+"""jit'd public wrapper: (B, S, H, D) layout adapter + dispatch.
+
+On TPU backends the Pallas kernel runs compiled; everywhere else
+``interpret=True`` executes the kernel body in Python for validation
+(CPU CI) — same numerics, no Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "attn_softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, window: int = 0, attn_softcap: float = 0.0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = None):
+    """q: (B, S, H, D); k, v: (B, S, Hkv, D) — the model-layer layout."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, window=window,
+                               softcap=attn_softcap, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

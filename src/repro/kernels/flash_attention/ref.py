@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attention_bhsd(q, k, v, *, window: int = 0, softcap: float = 0.0):
+    """Reference causal GQA attention. q: (B,H,S,D); k,v: (B,Hkv,S,D)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, s, d) / math.sqrt(d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = q_pos >= k_pos
+    if window:
+        mask &= (q_pos - k_pos) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, h, s, d).astype(q.dtype)

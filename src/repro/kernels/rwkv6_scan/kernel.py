@@ -1,0 +1,97 @@
+"""Chunked WKV6 (RWKV-6 linear attention) Pallas TPU kernel.
+
+Grid = (B, H, n_chunks) with the chunk axis innermost (sequential); the
+matrix-valued state S (D, D) is carried in VMEM scratch across chunks.
+Within a chunk the recurrence becomes three MXU matmuls (see
+``ref.wkv6_chunked`` for the derivation): inflow (r~ @ S), intra-chunk
+(masked (r~ @ k~^T) @ v), and the state update (k_tail^T @ v) — this is the
+TPU-native re-blocking of the GPU kernel's register-resident recurrence
+(DESIGN.md §2: hardware adaptation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sout_ref,
+            s_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)            # (L, D)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)               # (1, D) -> broadcast
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))
+    cum = jnp.cumsum(logw, axis=0)                 # (L, D)
+    cum_prev = cum - logw
+    r_scaled = r * jnp.exp(cum_prev)
+    k_scaled = k * jnp.exp(-cum)
+
+    state = s_scr[...]
+    y_in = jax.lax.dot_general(r_scaled, state, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    att = jax.lax.dot_general(r_scaled, k_scaled, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (L, L)
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(row > col, att, 0.0)           # strictly causal
+    y_intra = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_diag = jnp.sum(r * u * k, axis=1, keepdims=True) * v
+    o_ref[0, 0] = (y_in + y_intra + y_diag).astype(o_ref.dtype)
+
+    decay_all = jnp.exp(cum[-1:])                  # (1, D)
+    k_tail = k * jnp.exp(cum[-1:] - cum)
+    s_scr[...] = decay_all.T * state + jax.lax.dot_general(
+        k_tail, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        sout_ref[0, 0] = s_scr[...]
+
+
+def wkv6_bhsd(r, k, v, w, u, s0, *, chunk: int = 64,
+              interpret: bool = False):
+    """r,k,v,w: (B, H, S, D); u: (H, D); s0: (B, H, D, D).
+
+    Returns (y (B,H,S,D) in r.dtype, s_final (B,H,D,D) f32).
+    """
+    b, h, s, d = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=nc)
+    seq_spec = pl.BlockSpec((1, 1, chunk, d),
+                            lambda bi, hi, ci: (bi, hi, ci, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, d), lambda bi, hi, ci: (hi, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, d, d), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), r.dtype),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the WKV6 kernel: (B, S, H, D) layout adapter."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import wkv6_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, s0, *, chunk: int = 64, interpret: bool = None):
+    """r,k,v,w: (B, S, H, D); u: (H, D); s0: (B, H, D, D) — model layout."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    args = [jnp.swapaxes(t, 1, 2) for t in (r, k, v, w)]
+    y, s_fin = wkv6_bhsd(*args, u, s0, chunk=chunk, interpret=interpret)
+    return jnp.swapaxes(y, 1, 2), s_fin

@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the chunked WKV6 recurrence (and the chunked algorithm
+itself, shared with the model's "chunked" backend).
+
+Recurrence (per batch b, head h):
+    y_t = r_t . (diag(u) k_t v_t^T + S_{t-1})
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          w_t in (0,1), data-dependent
+
+Chunked (block-parallel, matmul) form over chunks of length L:
+with cum_t = sum_{s<=t} log w_s (within-chunk cumulative log decay):
+
+  inflow_t  = (r_t * exp(cum_{t-1})) . S_0
+  intra[t,s]= (r_t * exp(cum_{t-1} - cum_s)) . k_s        (s < t)
+  diag[t]   = (r_t * u) . k_t
+  S_L       = exp(cum_L) * S_0 + sum_s exp(cum_L - cum_s) k_s v_s^T
+
+All pairwise terms are two scaled matmuls (MXU-friendly) — this is the block
+decomposition the Pallas kernel implements with VMEM tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_sequential(r, k, v, w, u, s0):
+    """Reference sequential recurrence. r,k,v,w: (B,S,H,D); u: (H,D); s0: (B,H,D,D)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))
+    s, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), s
+
+
+def wkv6_chunked(r, k, v, w, u, s0, chunk_size: int = 64):
+    """Block-parallel WKV6. Same contract/result as ``wkv6_sequential``."""
+    b, s, h, d = r.shape
+    l = min(chunk_size, s)
+    if s % l:
+        # fall back for ragged tails (decode path uses sequential anyway)
+        return wkv6_sequential(r, k, v, w, u, s0)
+    nc = s // l
+
+    rc = r.reshape(b, nc, l, h, d).swapaxes(0, 1).astype(jnp.float32)
+    kc = k.reshape(b, nc, l, h, d).swapaxes(0, 1).astype(jnp.float32)
+    vc = v.reshape(b, nc, l, h, d).swapaxes(0, 1).astype(jnp.float32)
+    wc = w.reshape(b, nc, l, h, d).swapaxes(0, 1).astype(jnp.float32)
+
+    causal_mask = jnp.tril(jnp.ones((l, l), bool), k=-1)  # strictly lower
+
+    def chunk(s_state, inp):
+        rb, kb, vb, wb = inp                       # (B,L,H,D)
+        logw = jnp.log(jnp.maximum(wb, 1e-30))
+        cum = jnp.cumsum(logw, axis=1)             # (B,L,H,D) = cum_t
+        cum_prev = cum - logw                      # cum_{t-1}
+        r_scaled = rb * jnp.exp(cum_prev)
+        k_scaled = kb * jnp.exp(-cum)
+        # inflow from carried state
+        y_in = jnp.einsum("blhk,bhkv->blhv", r_scaled, s_state)
+        # intra-chunk pairwise (strictly causal)
+        att = jnp.einsum("blhk,bmhk->bhlm", r_scaled, k_scaled)
+        att = att * causal_mask[None, None]
+        y_intra = jnp.einsum("bhlm,bmhv->blhv", att, vb)
+        # diagonal bonus
+        y_diag = jnp.einsum("blhk,blhk->blh", rb * u[None, None], kb)[..., None] * vb
+        y = y_in + y_intra + y_diag
+        # state update
+        decay_all = jnp.exp(cum[:, -1])            # (B,H,D) total chunk decay
+        k_tail = kb * jnp.exp(cum[:, -1][:, None] - cum)   # exp(cum_L - cum_s)
+        s_new = decay_all[..., None] * s_state + \
+            jnp.einsum("blhk,blhv->bhkv", k_tail, vb)
+        return s_new, y
+
+    s_fin, ys = jax.lax.scan(chunk, s0.astype(jnp.float32), (rc, kc, vc, wc))
+    return ys.swapaxes(0, 1).reshape(b, s, h, d), s_fin

@@ -1,0 +1,347 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#   This flag is dry-run-only — smoke tests and benchmarks see 1 device.
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ASSIGNED_ARCHS, SHAPES, MAMBA, RWKV, all_configs, cell_is_runnable,
+    get_config)
+from repro.distributed.hlo_analysis import (  # noqa: E402
+    Roofline, collective_bytes, count_collective_ops)
+from repro.distributed.sharding import ShardingRules  # noqa: E402
+from repro.launch import specs as specs_mod  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    make_prefill_step, make_serve_step, make_train_step)
+from repro.models.model import RunOptions  # noqa: E402
+from repro.optim import AdamW  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+def _resolve_shape(name):
+    # assigned shapes plus the paper Table-5 training shapes
+    if name in SHAPES:
+        return SHAPES[name]
+    from repro.configs.paper_solar import PAPER_SHAPES
+    return PAPER_SHAPES[name]
+
+
+# ---------------------------------------------------------------------------
+# RunOptions variants (the §Perf hillclimb ladder)
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    # paper-faithful baseline: HSDP + standard chunked attention + remat
+    "baseline": RunOptions(attn_backend="chunked", q_chunk=2048, kv_chunk=2048,
+                           remat="dots", mamba_chunk=1,
+                           rwkv_backend="sequential"),
+    # naive full-matrix attention (the memory-term ablation)
+    "naive-attn": RunOptions(attn_backend="naive", remat="dots"),
+    # the naive port: no grad constraints, naive attention, no remat —
+    # where a straight translation of the paper's stack lands (§Perf start)
+    "naive-port": RunOptions(attn_backend="naive", remat="none",
+                             constrain_grads=False),
+    # no remat (compute-vs-memory trade)
+    "no-remat": RunOptions(attn_backend="chunked", q_chunk=2048, kv_chunk=2048,
+                           remat="none"),
+    # full remat: save only layer boundaries
+    "full-remat": RunOptions(attn_backend="chunked", q_chunk=2048,
+                             kv_chunk=2048, remat="full"),
+    # chunked CE loss (never materialise (B,S,V) logits)
+    "loss-chunk": RunOptions(attn_backend="chunked", q_chunk=2048,
+                             kv_chunk=2048, remat="full", loss_chunk=512),
+    # chunk-parallel recurrences (MXU-form mamba/rwkv)
+    "chunked-scan": RunOptions(attn_backend="chunked", q_chunk=2048,
+                               kv_chunk=2048, remat="full", mamba_chunk=16,
+                               rwkv_backend="chunked", rwkv_chunk=64),
+    # EP-pinned MoE dispatch (collective-term fix; §Perf iteration 3)
+    "moe-shard": RunOptions(attn_backend="chunked", q_chunk=2048,
+                            kv_chunk=2048, remat="dots",
+                            moe_constraints=True),
+    # everything on
+    "opt": RunOptions(attn_backend="chunked", q_chunk=2048, kv_chunk=2048,
+                      remat="full", loss_chunk=512, mamba_chunk=16,
+                      rwkv_backend="chunked", rwkv_chunk=64,
+                      moe_constraints=True),
+    # iteration 5: drop remat (kills backward re-gathers) + bf16 attn math
+    "opt2": RunOptions(attn_backend="chunked", q_chunk=2048, kv_chunk=2048,
+                       remat="none", loss_chunk=512, mamba_chunk=16,
+                       rwkv_backend="chunked", rwkv_chunk=64,
+                       moe_constraints=True, attn_bf16=True),
+    # bf16 attention math alone (memory-term ablation for prefill)
+    "bf16-attn": RunOptions(attn_backend="chunked", q_chunk=2048,
+                            kv_chunk=2048, remat="dots", attn_bf16=True),
+    # iteration 9: explicit all-to-all MoE dispatch (shard_map)
+    "moe-a2a": RunOptions(attn_backend="chunked", q_chunk=2048,
+                          kv_chunk=2048, remat="dots", moe_impl="a2a"),
+}
+
+
+def _build_lowered(cfg, shape, opts, mesh, rules, optimizer):
+    """jit + lower one step function for (cfg, shape) under ``mesh``."""
+    from repro.distributed.context import activation_sharding
+    specs = specs_mod.input_specs(cfg, shape, optimizer)
+    with mesh, activation_sharding(rules):
+        if shape.kind == "train":
+            p_sh = rules.params_shardings(specs["params"])
+            o_sh = rules.opt_shardings(specs["opt_state"], specs["params"])
+            b_sh = rules.batch_shardings(specs["batch"])
+            step = make_train_step(
+                cfg, opts, optimizer,
+                grad_shardings=p_sh if opts.constrain_grads else None)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(specs["params"], specs["opt_state"],
+                                   specs["batch"])
+        elif shape.kind == "prefill":
+            p_sh = rules.params_shardings(specs["params"])
+            b_sh = rules.batch_shardings(specs["batch"])
+            step = make_prefill_step(cfg, opts)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(specs["params"], specs["batch"])
+        else:  # decode
+            p_sh = rules.params_shardings(specs["params"])
+            c_sh = rules.cache_shardings(specs["cache"])
+            t_sh = rules.batch_shardings(specs["tokens"])
+            step = make_serve_step(cfg, opts)
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, c_sh, t_sh, rules.replicated()),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(specs["params"], specs["cache"],
+                                   specs["tokens"], specs["pos"])
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _cost_numbers(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    ops = count_collective_ops(hlo)
+    return flops, byts, coll, ops
+
+
+def _inner_scan_correction(cfg, shape):
+    """Analytic per-trip correction for time-recurrence lax.scans (counted
+    once by cost_analysis).  Mamba/RWKV recurrences are 1-2% of block cost;
+    projections dominate — see EXPERIMENTS.md §Roofline methodology."""
+    if shape.kind == "decode":
+        return 0.0, 0.0          # single-token step: trip count is 1
+    b, s = shape.global_batch, shape.seq_len
+    extra_f = extra_b = 0.0
+    for spec in cfg.layers:
+        if spec.kind == MAMBA:
+            din = spec.expand * cfg.d_model
+            n = spec.d_state
+            per_f = 10.0 * b * din * n
+            per_b = 6.0 * b * din * n * 4
+        elif spec.kind == RWKV:
+            h = cfg.d_model // cfg.rwkv_head_dim
+            dd = cfg.rwkv_head_dim
+            per_f = 8.0 * b * h * dd * dd
+            per_b = 3.0 * b * h * dd * dd * 4
+        else:
+            continue
+        extra_f += (s - 1) * per_f
+        extra_b += (s - 1) * per_b
+    if shape.kind == "train":    # backward re-runs the recurrence
+        extra_f *= 3.0
+        extra_b *= 3.0
+    return extra_f, extra_b
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               variant: str = "baseline", fsdp_pods: bool = False,
+               skip_cost: bool = False):
+    """One (arch x shape x mesh) cell.
+
+    1. GATE: lower+compile the full config (scan layer stack) — proves the
+       sharding config is coherent; memory_analysis() is the fits-check.
+    2. COST: lower n_periods=1 and n_periods=2 with unrolled period loops,
+       then extrapolate flops/bytes/collectives to the full depth (XLA
+       cost_analysis counts scan bodies once — measured, see §Roofline).
+    """
+    cfg = get_config(arch)
+    shape = _resolve_shape(shape_name)
+    opts = VARIANTS[variant]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(mesh, fsdp_pods=fsdp_pods)
+    optimizer = AdamW()
+    chips = mesh.devices.size
+
+    out = {"chips": chips}
+
+    # ---- gate compile (full model) ----
+    t0 = time.time()
+    lowered, compiled = _build_lowered(cfg, shape, opts, mesh, rules, optimizer)
+    out["gate_compile_s"] = round(time.time() - t0, 1)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                mem[k] = int(getattr(ma, k, 0) or 0)
+    except Exception as e:
+        mem["error"] = str(e)
+    out["memory_analysis"] = mem
+    out["gate_collective_ops"] = count_collective_ops(compiled.as_text())
+    del lowered, compiled
+
+    if skip_cost:
+        return out
+
+    # ---- two-point cost extraction ----
+    cost_opts = dataclasses.replace(
+        opts, unroll_periods=True, loss_chunk=0,
+        rwkv_backend="sequential", mamba_chunk=1)
+    pts = {}
+    for npd in (1, 2):
+        cfg_n = dataclasses.replace(cfg, n_periods=npd)
+        t0 = time.time()
+        _, comp = _build_lowered(cfg_n, shape, cost_opts, mesh, rules, optimizer)
+        pts[npd] = _cost_numbers(comp)
+        out[f"cost_compile_{npd}p_s"] = round(time.time() - t0, 1)
+        del comp
+
+    n = cfg.n_periods
+    f1, b1, c1, _ = pts[1]
+    f2, b2, c2, ops2 = pts[2]
+    flops_dev = f1 + (n - 1) * (f2 - f1)
+    bytes_dev = b1 + (n - 1) * (b2 - b1)
+    coll: dict = {}
+    for kind in set(c1) | set(c2):
+        v = c1.get(kind, 0) + (n - 1) * (c2.get(kind, 0) - c1.get(kind, 0))
+        if v > 0:
+            coll[kind] = v
+
+    corr_f, corr_b = _inner_scan_correction(cfg, shape)
+    flops_dev += corr_f / chips
+    bytes_dev += corr_b / chips
+
+    roof = Roofline(
+        flops=flops_dev * chips,
+        hbm_bytes=bytes_dev * chips,
+        coll_bytes_per_device=float(sum(coll.values())),
+        chips=chips,
+        coll_breakdown=coll,
+    )
+    out.update({
+        "per_device_flops": flops_dev,
+        "per_device_bytes": bytes_dev,
+        "roofline": roof.as_dict(),
+        "inner_scan_correction_flops": corr_f,
+    })
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             variant: str = "baseline", fsdp_pods: bool = False,
+             skip_cost: bool = False, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant, "fsdp_pods": fsdp_pods,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+    }
+    ok, reason = cell_is_runnable(cfg, _resolve_shape(shape_name))
+    if not ok:
+        record.update({"status": "SKIP", "reason": reason})
+        return record
+    t0 = time.time()
+    try:
+        record.update(lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                 variant=variant, fsdp_pods=fsdp_pods,
+                                 skip_cost=skip_cost))
+        record["status"] = "OK"
+        record["total_s"] = round(time.time() - t0, 1)
+        if verbose and "roofline" in record:
+            r = record["roofline"]
+            print(f"  memory_analysis: {record['memory_analysis']}")
+            print(f"  roofline: compute={r['compute_s']:.4f}s "
+                  f"memory={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                  f"dominant={r['dominant']}", flush=True)
+    except Exception as e:
+        record.update({"status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:],
+                       "total_s": round(time.time() - t0, 1)})
+    return record
+
+
+def _result_path(variant: str) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    return RESULTS / f"dryrun_{variant}.json"
+
+
+def load_results(variant: str) -> dict:
+    p = _result_path(variant)
+    if p.exists():
+        return json.loads(p.read_text())
+    return {}
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="single arch (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--fsdp-pods", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="gate compile only (no roofline extraction)")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS + ["paper-solar-102b"]
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = load_results(args.variant)
+    for arch in archs:
+        for shape in shapes:
+            for multi_pod in meshes:
+                key = f"{arch}|{shape}|{'2x16x16' if multi_pod else '16x16'}"
+                if args.fsdp_pods:
+                    key += "|fsdp_pods"
+                prev = results.get(key)
+                if prev and prev.get("status") in ("OK", "SKIP") and not args.force:
+                    print(f"[cached] {key}: {prev['status']}")
+                    continue
+                print(f"[run] {key} variant={args.variant} ...", flush=True)
+                rec = run_cell(arch, shape, multi_pod=multi_pod,
+                               variant=args.variant, fsdp_pods=args.fsdp_pods,
+                               skip_cost=args.skip_cost)
+                results[key] = rec
+                _result_path(args.variant).write_text(json.dumps(results, indent=1))
+                status = rec["status"]
+                extra = rec.get("reason") or rec.get("error") or \
+                    f"total={rec.get('total_s')}s dominant={rec.get('roofline', {}).get('dominant')}"
+                print(f"  -> {status} ({extra})", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "OK")
+    n_skip = sum(1 for r in results.values() if r["status"] == "SKIP")
+    n_fail = sum(1 for r in results.values() if r["status"] == "FAIL")
+    print(f"done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

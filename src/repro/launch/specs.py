@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+The dry-run lowers against these; nothing here touches real device memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as model_mod
+from repro.optim import AdamW
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.embed_inputs:
+        out["tokens"] = SDS((b, s), jnp.int32)
+    else:
+        out["embeds"] = SDS((b, s, cfg.d_model), cfg.cdtype)
+    if shape.kind == "train":
+        out["labels"] = SDS((b, s), jnp.int32)
+    if cfg.n_img_tokens:
+        out["img_embeds"] = SDS((b, cfg.n_img_tokens, cfg.d_model), cfg.cdtype)
+    return out
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """serve_step inputs: (tokens, pos, cache). Cache spans shape.seq_len."""
+    b = shape.global_batch
+    if cfg.embed_inputs:
+        tokens = SDS((b, 1), jnp.int32)
+    else:
+        tokens = SDS((b, 1, cfg.d_model), cfg.cdtype)
+    pos = SDS((), jnp.int32)
+    cache = jax.eval_shape(lambda: model_mod.init_cache(cfg, b, shape.seq_len))
+    return tokens, pos, cache
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: model_mod.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(cfg: ArchConfig, optimizer: AdamW, params_shapes=None):
+    p = params_shapes if params_shapes is not None else abstract_params(cfg)
+    return jax.eval_shape(optimizer.init, p)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, optimizer: AdamW = None):
+    """All inputs for the step kind of ``shape`` (dry-run entry point)."""
+    if shape.kind == "train":
+        optimizer = optimizer or AdamW()
+        p = abstract_params(cfg)
+        o = abstract_opt_state(cfg, optimizer, p)
+        return {"params": p, "opt_state": o,
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": abstract_params(cfg),
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        tokens, pos, cache = decode_input_specs(cfg, shape)
+        return {"params": abstract_params(cfg), "cache": cache,
+                "tokens": tokens, "pos": pos}
+    raise ValueError(shape.kind)

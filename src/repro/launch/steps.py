@@ -1,0 +1,82 @@
+"""Step functions (train / prefill / serve) shared by smoke tests, the
+dry-run, and the real training driver."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as model_mod
+from repro.models.model import RunOptions
+from repro.optim import AdamW
+
+
+def make_train_step(cfg: ArchConfig, opts: RunOptions, optimizer: AdamW,
+                    grad_shardings=None):
+    """``grad_shardings``: optional pytree of NamedSharding matching params.
+
+    Without explicit constraints XLA's sharding propagation replicates
+    weight-gradient matmuls across the ``model`` axis (measured 8x FLOP
+    inflation on dW contractions — EXPERIMENTS.md §Perf iteration 2), so
+    production configs pin dW to the parameter sharding.
+    """
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model_mod.loss_fn, has_aux=True)(params, cfg, opts, batch)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        params, opt_state, opt_metrics = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, opts: RunOptions):
+    def prefill_step(params, batch):
+        inputs = batch.get("tokens", batch.get("embeds"))
+        logits, cache = model_mod.prefill(params, cfg, opts, inputs,
+                                          img_embeds=batch.get("img_embeds"))
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, opts: RunOptions):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model_mod.decode_step(params, cfg, opts, tokens,
+                                              cache, pos)
+        return logits, cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Synthetic batches (smoke tests / examples); the dry-run uses
+# launch.specs.input_specs (ShapeDtypeStructs) instead.
+# ---------------------------------------------------------------------------
+
+def synthetic_batch(rng, cfg: ArchConfig, batch: int, seq: int):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    out = {"labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size)}
+    if cfg.embed_inputs:
+        out["tokens"] = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size)
+    else:
+        out["embeds"] = jax.random.normal(k1, (batch, seq, cfg.d_model),
+                                          cfg.cdtype) * 0.02
+    if cfg.n_img_tokens:
+        out["img_embeds"] = jax.random.normal(
+            k3, (batch, cfg.n_img_tokens, cfg.d_model), cfg.cdtype) * 0.02
+    return out
+
+
+def synthetic_decode_inputs(rng, cfg: ArchConfig, batch: int, seq: int,
+                            pos: Optional[int] = None):
+    cache = model_mod.init_cache(cfg, batch, seq)
+    if cfg.embed_inputs:
+        tokens = jax.random.randint(rng, (batch, 1), 0, cfg.vocab_size)
+    else:
+        tokens = jax.random.normal(rng, (batch, 1, cfg.d_model), cfg.cdtype)
+    pos = jnp.asarray(seq - 1 if pos is None else pos, jnp.int32)
+    return cache, tokens, pos

@@ -1,0 +1,183 @@
+"""Attention backends.
+
+Three interchangeable implementations of causal (optionally sliding-window,
+optionally logit-softcapped) grouped-query attention:
+
+* ``naive``   — single einsum materialising the full (Sq, Sk) score matrix.
+                Paper-faithful baseline; memory term scales O(S^2).
+* ``chunked`` — flash-attention algorithm in pure jnp: online softmax over
+                statically-unrolled (q_chunk x kv_chunk) blocks with static
+                causal/window block skipping.  This is the memory-optimised
+                path the dry-run can lower on any backend.
+* ``pallas``  — the TPU kernel in ``repro.kernels.flash_attention`` (same
+                block decomposition, explicit VMEM BlockSpecs); validated in
+                interpret mode, selected on real TPU runs.
+
+All shapes are (batch, seq, heads, head_dim); GQA is expressed by reshaping
+queries to (B, S, n_kv, group, D).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _gqa_split(q, n_kv):
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _apply_softcap(scores, cap):
+    if cap:
+        scores = cap * jnp.tanh(scores / cap)
+    return scores
+
+
+# ---------------------------------------------------------------------------
+# naive backend
+# ---------------------------------------------------------------------------
+
+def naive_attention(q, k, v, *, window=0, attn_softcap=0.0, q_offset=None,
+                    kv_len=None, causal=True):
+    """Full-matrix attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D).
+    ``q_offset``: absolute position of q[0] (traced ok) — decode passes the
+    cache write position; defaults to Sk - Sq (aligned suffix).
+    ``kv_len``: number of valid cache entries (traced ok) for decode.
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    qg = _gqa_split(q, hkv)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    scores = _apply_softcap(scores, attn_softcap)
+
+    q_pos = jnp.arange(sq) + (q_offset if q_offset is not None else sk - sq)
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    if kv_len is not None:
+        mask &= k_pos[None, :] < kv_len
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash) backend — full-sequence processing (train / prefill)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, window=0, attn_softcap=0.0,
+                      q_chunk=1024, kv_chunk=1024, bf16_math=False):
+    """Online-softmax blocked attention with static block skipping.
+
+    Requires Sq == Sk (self-attention over a full sequence, offset 0) and
+    chunk sizes dividing the sequence.  Causal always on.  ``window`` is a
+    *static* int (0 = global).
+    """
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    cq = min(q_chunk, s)
+    ck = min(kv_chunk, s)
+    if s % cq or s % ck:     # ragged sequence: exact fallback
+        return naive_attention(q, k, v, window=window,
+                               attn_softcap=attn_softcap)
+    nq, nk = s // cq, s // ck
+    scale = 1.0 / math.sqrt(d)
+    # bf16_math: keep q/k/v in bf16 and let the MXU accumulate in fp32
+    # (preferred_element_type) — halves score-path HBM traffic; softmax
+    # statistics stay fp32 either way.
+    in_dt = q.dtype if bf16_math else jnp.float32
+    qg = (_gqa_split(q, hkv) * jnp.asarray(scale, q.dtype)).astype(in_dt)
+    kf = k.astype(in_dt)
+    vf = v.astype(in_dt)
+
+    outs = []
+    for i in range(nq):
+        q_blk = qg[:, i * cq:(i + 1) * cq]                       # (B,cq,hkv,g,D)
+        # static block range: causal upper bound, window lower bound
+        j_hi = ((i + 1) * cq - 1) // ck          # last kv chunk with any valid key
+        j_lo = max(0, (i * cq - window + 1) // ck) if window else 0
+        m = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        acc = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+        for j in range(j_lo, j_hi + 1):
+            k_blk = kf[:, j * ck:(j + 1) * ck]
+            v_blk = vf[:, j * ck:(j + 1) * ck]
+            sc = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                            preferred_element_type=jnp.float32)
+            sc = _apply_softcap(sc, attn_softcap)
+            # masking needed only on blocks crossing the causal diagonal or
+            # the window edge
+            q_pos = jnp.arange(cq) + i * cq
+            k_pos = jnp.arange(ck) + j * ck
+            need_causal = j * ck + ck - 1 > i * cq          # block reaches above diag
+            need_window = window and (i * cq + cq - 1) - (j * ck) >= window
+            if need_causal or need_window:
+                blk_mask = jnp.ones((cq, ck), bool)
+                if need_causal:
+                    blk_mask &= q_pos[:, None] >= k_pos[None, :]
+                if need_window:
+                    blk_mask &= (q_pos[:, None] - k_pos[None, :]) < window
+                sc = jnp.where(blk_mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(in_dt), v_blk,
+                preferred_element_type=jnp.float32)
+            m = m_new
+        out_blk = acc / jnp.maximum(l[..., None], 1e-37)
+        outs.append(out_blk)                                    # (B,hkv,g,cq,D)
+    out = jnp.concatenate(outs, axis=3)                          # (B,hkv,g,S,D)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+def self_attention(q, k, v, *, window=0, attn_softcap=0.0, backend="chunked",
+                   q_chunk=1024, kv_chunk=1024, bf16_math=False):
+    """Full-sequence causal self-attention (train / prefill path)."""
+    if backend == "naive":
+        return naive_attention(q, k, v, window=window, attn_softcap=attn_softcap)
+    if backend == "chunked":
+        return chunked_attention(q, k, v, window=window, attn_softcap=attn_softcap,
+                                 q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                 bf16_math=bf16_math)
+    if backend == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, window=window, attn_softcap=attn_softcap)
+    raise ValueError(f"unknown attention backend {backend!r}")
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, attn_softcap=0.0):
+    """Single-token decode against a (B, S_max, Hkv, D) cache.
+
+    ``pos`` (traced scalar): index of the token being decoded; cache entries
+    at positions <= pos are valid.
+    """
+    return naive_attention(q, k_cache, v_cache, window=window,
+                           attn_softcap=attn_softcap, q_offset=pos,
+                           kv_len=pos + 1)
+
+
+def cross_attention(q, k, v):
+    """Non-causal attention over a fixed encoder sequence (VLM image tokens)."""
+    return naive_attention(q, k, v, causal=False)

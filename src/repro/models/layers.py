@@ -1,0 +1,72 @@
+"""Shared neural-net primitives (pure functional JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(rng, shape, dtype, scale=0.02):
+    return (scale * jax.random.truncated_normal(rng, -2.0, 2.0, shape)).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def group_norm_heads(x, scale, bias, eps=64e-5):
+    """Per-head group norm over the last dim (RWKV ln_x). x: (..., H, D)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    out = x * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def rope(q, k, positions, theta=10_000.0):
+    """Rotary embeddings. q,k: (B, S, H, D); positions: (S,) or scalar-like (B?, S)."""
+    d = q.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    if angles.ndim == 1:        # scalar position (decode) -> (1, 1, 1, half)
+        angles = angles[None, None, None, :]
+    elif angles.ndim == 2:      # (S, half) -> (1, S, 1, half)
+        angles = angles[None, :, None, :]
+    elif angles.ndim == 3:      # (B, S, half) -> (B, S, 1, half)
+        angles = angles[:, :, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+
+    def rot(x):
+        x1, x2 = x[..., :half], x[..., half:]
+        xr = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+        return xr.astype(x.dtype)
+
+    return rot(q), rot(k)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def token_shift(x, prev=None):
+    """RWKV token shift: x_{t-1} along the sequence axis.
+
+    ``prev``: (B, d) carry for decode/prefill chunking (last token of the
+    previous segment); defaults to zeros.
+    """
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)

@@ -1,0 +1,580 @@
+"""Model composition: init / forward / prefill / decode for every arch family.
+
+A model is a pytree of parameters plus pure functions.  The layer stack is a
+``lax.scan`` over ``n_periods`` stacked period-parameter trees; the (static)
+heterogeneous structure of one period is unrolled inside the scanned body
+(DESIGN.md §6 "compile-size control").
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec, ATTN, CROSS_ATTN, MAMBA, RWKV
+from repro.distributed import context as dist_ctx
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.layers import normal_init, rms_norm, rope, swiglu, softcap
+
+
+# ---------------------------------------------------------------------------
+# Run options (performance levers — see EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RunOptions:
+    attn_backend: str = "chunked"      # naive | chunked | pallas
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    mamba_chunk: int = 1               # 1 = sequential scan
+    rwkv_backend: str = "sequential"   # sequential | chunked
+    rwkv_chunk: int = 64
+    remat: str = "none"                # none | dots | full
+    loss_chunk: int = 0                # 0 = full-logit CE; >0 = seq-chunked CE
+    lb_loss_weight: float = 0.01
+    z_loss_weight: float = 1e-4
+    # cost-extraction mode: python-loop over periods instead of lax.scan so
+    # XLA cost_analysis counts every layer (scan bodies are counted ONCE
+    # regardless of trip count — measured; see EXPERIMENTS.md §Roofline).
+    unroll_periods: bool = False
+    # pin dW shardings to the param shardings (fixes 8x replicated-gradient
+    # FLOP inflation — see make_train_step / EXPERIMENTS.md §Perf)
+    constrain_grads: bool = True
+    # pin MoE dispatch tensors to the EP layout (collective-term fix;
+    # False preserves the recorded paper-faithful baseline)
+    moe_constraints: bool = False
+    # bf16 attention math with fp32 MXU accumulation (memory-term lever)
+    attn_bf16: bool = False
+    # MoE dispatch implementation: "dense" (constraint-hinted GSPMD) or
+    # "a2a" (explicit shard_map all-to-all routing - Perf iteration 9)
+    moe_impl: str = "dense"
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_ffn(rng, cfg: ArchConfig, spec: LayerSpec):
+    if spec.moe is not None:
+        return {"moe": moe_mod.init_moe(rng, cfg.d_model, spec.moe, cfg.pdtype)}
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {"ffn": {
+        "w_gate": normal_init(k1, (cfg.d_model, cfg.d_ff), cfg.pdtype),
+        "w_up": normal_init(k2, (cfg.d_model, cfg.d_ff), cfg.pdtype),
+        "w_down": normal_init(k3, (cfg.d_ff, cfg.d_model), cfg.pdtype),
+    }}
+
+
+def _init_attn_layer(rng, cfg: ArchConfig, spec: LayerSpec):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(rng, 6)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "wq": normal_init(ks[0], (cfg.d_model, cfg.n_heads * hd), cfg.pdtype),
+        "wk": normal_init(ks[1], (cfg.d_model, cfg.n_kv_heads * hd), cfg.pdtype),
+        "wv": normal_init(ks[2], (cfg.d_model, cfg.n_kv_heads * hd), cfg.pdtype),
+        "wo": normal_init(ks[3], (cfg.n_heads * hd, cfg.d_model), cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), cfg.pdtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.pdtype)
+    if spec.kind == CROSS_ATTN:
+        p["gate_attn"] = jnp.zeros((), cfg.pdtype)
+        p["gate_ffn"] = jnp.zeros((), cfg.pdtype)
+    p.update(_init_ffn(ks[4], cfg, spec))
+    return p
+
+
+def _init_mamba_layer(rng, cfg: ArchConfig, spec: LayerSpec):
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "mixer": mamba_mod.init_mamba(k1, cfg.d_model, spec, cfg.pdtype),
+    }
+    p.update(_init_ffn(k2, cfg, spec))
+    return p
+
+
+def _init_rwkv_layer(rng, cfg: ArchConfig, spec: LayerSpec):
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "mix": rwkv_mod.init_rwkv(rng, cfg.d_model, cfg.d_ff,
+                                  cfg.rwkv_head_dim, cfg.pdtype),
+    }
+
+
+def init_layer(rng, cfg: ArchConfig, spec: LayerSpec):
+    if spec.kind in (ATTN, CROSS_ATTN):
+        return _init_attn_layer(rng, cfg, spec)
+    if spec.kind == MAMBA:
+        return _init_mamba_layer(rng, cfg, spec)
+    if spec.kind == RWKV:
+        return _init_rwkv_layer(rng, cfg, spec)
+    raise ValueError(spec.kind)
+
+
+def init_period(rng, cfg: ArchConfig):
+    ks = jax.random.split(rng, len(cfg.period))
+    return {f"pos{i}": init_layer(ks[i], cfg, spec)
+            for i, spec in enumerate(cfg.period)}
+
+
+def init_params(rng, cfg: ArchConfig):
+    k_emb, k_head, k_pre, k_per, k_suf = jax.random.split(rng, 5)
+    params: dict = {"final_norm": jnp.zeros((cfg.d_model,), cfg.pdtype)}
+    if cfg.embed_inputs:
+        params["embed"] = normal_init(k_emb, (cfg.vocab_size, cfg.d_model), cfg.pdtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(k_head, (cfg.d_model, cfg.vocab_size), cfg.pdtype)
+    if cfg.prefix:
+        kp = jax.random.split(k_pre, len(cfg.prefix))
+        params["prefix"] = tuple(init_layer(kp[i], cfg, s)
+                                 for i, s in enumerate(cfg.prefix))
+    if cfg.n_periods:
+        params["period"] = jax.vmap(lambda r: init_period(r, cfg))(
+            jax.random.split(k_per, cfg.n_periods))
+    if cfg.suffix:
+        ks = jax.random.split(k_suf, len(cfg.suffix))
+        params["suffix"] = tuple(init_layer(ks[i], cfg, s)
+                                 for i, s in enumerate(cfg.suffix))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(h, p, spec: LayerSpec, opts=None):
+    if spec.moe is not None:
+        if opts is not None and opts.moe_impl == "a2a":
+            ctx = dist_ctx.current()
+            b, s, d = h.shape
+            if ctx is not None and ctx.mesh is not None \
+                    and spec.moe.n_experts % ctx.model_size == 0 \
+                    and (b * s) % (ctx.batch_size * ctx.model_size) == 0:
+                from repro.models.moe_a2a import moe_ffn_a2a
+                out, aux = moe_ffn_a2a(h, p["moe"], spec.moe, ctx.mesh,
+                                       batch_axes=ctx.batch_axes,
+                                       model_axis=ctx.model_axis)
+                # restore the residual layout immediately: the shard_map's
+                # (data x model) token sharding otherwise propagates into
+                # the next attention layer and forces full rematerialization
+                return dist_ctx.shard_batch(out), aux
+        return moe_mod.moe_ffn(h, p["moe"], spec.moe,
+                               constraints=bool(opts and opts.moe_constraints))
+    return swiglu(h, **p["ffn"]), {}
+
+
+def _project_qkv(h, p, cfg: ArchConfig, kv_src=None):
+    hd = cfg.resolved_head_dim
+    b, s, _ = h.shape
+    kv_src = h if kv_src is None else kv_src
+    q = jnp.einsum("bsd,de->bse", h, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,de->bse", kv_src, p["wk"]).reshape(
+        b, kv_src.shape[1], cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", kv_src, p["wv"]).reshape(
+        b, kv_src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _attn_layer_full(x, p, spec: LayerSpec, cfg: ArchConfig, opts: RunOptions,
+                     positions, img_embeds=None, want_cache=False):
+    """Full-sequence attention layer (train / prefill). Returns (x, cache, aux)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    cache = None
+    if spec.kind == CROSS_ATTN:
+        q, k, v = _project_qkv(h, p, cfg, kv_src=img_embeds)
+        out = attn_mod.cross_attention(q, k, v)
+        out = out.reshape(*out.shape[:2], -1)
+        out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+        x = x + jnp.tanh(p["gate_attn"]) * out
+        if want_cache:
+            cache = {"k": k, "v": v}
+    else:
+        q, k, v = _project_qkv(h, p, cfg)
+        q, k = rope(q, k, positions, cfg.rope_theta)
+        out = attn_mod.self_attention(
+            q, k, v, window=spec.window, attn_softcap=cfg.attn_softcap,
+            backend=opts.attn_backend, q_chunk=opts.q_chunk,
+            kv_chunk=opts.kv_chunk, bf16_math=opts.attn_bf16)
+        out = out.reshape(*out.shape[:2], -1)
+        x = x + jnp.einsum("bse,ed->bsd", out, p["wo"])
+        if want_cache:
+            cache = {"k": k, "v": v}
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    ff, aux = _ffn_apply(h2, p, spec, opts)
+    if spec.kind == CROSS_ATTN:
+        x = x + jnp.tanh(p["gate_ffn"]) * ff
+    else:
+        x = x + ff
+    return x, cache, aux
+
+
+def _attn_layer_decode(x, p, spec: LayerSpec, cfg: ArchConfig, opts: RunOptions,
+                       cache, pos):
+    """Single-token decode. x: (B, 1, d). Returns (x, new_cache, aux)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind == CROSS_ATTN:
+        hd = cfg.resolved_head_dim
+        b = h.shape[0]
+        q = jnp.einsum("bsd,de->bse", h, p["wq"]).reshape(b, 1, cfg.n_heads, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        out = attn_mod.cross_attention(q, cache["k"], cache["v"])
+        out = jnp.einsum("bse,ed->bsd", out.reshape(b, 1, -1), p["wo"])
+        x = x + jnp.tanh(p["gate_attn"]) * out
+        new_cache = cache          # cross KV is static
+    else:
+        q, k, v = _project_qkv(h, p, cfg)
+        q, k = rope(q, k, pos, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        out = attn_mod.decode_attention(q, k_cache, v_cache, pos,
+                                        window=spec.window,
+                                        attn_softcap=cfg.attn_softcap)
+        x = x + jnp.einsum("bse,ed->bsd", out.reshape(*out.shape[:2], -1), p["wo"])
+        new_cache = {"k": k_cache, "v": v_cache}
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    ff, aux = _ffn_apply(h2, p, spec, opts)
+    if spec.kind == CROSS_ATTN:
+        x = x + jnp.tanh(p["gate_ffn"]) * ff
+    else:
+        x = x + ff
+    return x, new_cache, aux
+
+
+def _mamba_layer(x, p, spec: LayerSpec, cfg: ArchConfig, opts: RunOptions,
+                 state=None, want_cache=False):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    out, new_state = mamba_mod.mamba_mixer(h, p["mixer"], spec, state=state,
+                                           chunk_size=opts.mamba_chunk)
+    x = x + out
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    ff, aux = _ffn_apply(h2, p, spec, opts)
+    x = x + ff
+    return x, (new_state if (want_cache or state is not None) else None), aux
+
+
+def _rwkv_layer(x, p, cfg: ArchConfig, opts: RunOptions, state=None,
+                want_cache=False):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    tm_state = None if state is None else {"shift": state["shift"], "wkv": state["wkv"]}
+    out, new_tm = rwkv_mod.time_mix(h, p["mix"], cfg.rwkv_head_dim,
+                                    state=tm_state, backend=opts.rwkv_backend,
+                                    chunk_size=opts.rwkv_chunk)
+    x = x + out
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    cm_state = None if state is None else state["cm"]
+    out2, new_cm = rwkv_mod.channel_mix(h2, p["mix"], state=cm_state)
+    x = x + out2
+    new_state = None
+    if want_cache or state is not None:
+        new_state = {"shift": new_tm["shift"], "wkv": new_tm["wkv"], "cm": new_cm}
+    return x, new_state, aux_zero()
+
+
+def aux_zero():
+    return {}
+
+
+def apply_layer(x, p, spec: LayerSpec, cfg: ArchConfig, opts: RunOptions, *,
+                positions=None, img_embeds=None, cache=None, pos=None,
+                mode="train"):
+    """Unified layer application. Returns (x, cache_out, aux)."""
+    if spec.kind in (ATTN, CROSS_ATTN):
+        if mode == "decode":
+            return _attn_layer_decode(x, p, spec, cfg, opts, cache, pos)
+        return _attn_layer_full(x, p, spec, cfg, opts, positions,
+                                img_embeds=img_embeds,
+                                want_cache=(mode == "prefill"))
+    if spec.kind == MAMBA:
+        return _mamba_layer(x, p, spec, cfg, opts, state=cache,
+                            want_cache=(mode == "prefill"))
+    if spec.kind == RWKV:
+        return _rwkv_layer(x, p, cfg, opts, state=cache,
+                           want_cache=(mode == "prefill"))
+    raise ValueError(spec.kind)
+
+
+# ---------------------------------------------------------------------------
+# Cache init (decode entry point / dry-run specs)
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, seq_len: int):
+    hd = cfg.resolved_head_dim
+    if spec.kind == ATTN:
+        shape = (batch, seq_len, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, cfg.pdtype), "v": jnp.zeros(shape, cfg.pdtype)}
+    if spec.kind == CROSS_ATTN:
+        shape = (batch, cfg.n_img_tokens, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, cfg.pdtype), "v": jnp.zeros(shape, cfg.pdtype)}
+    if spec.kind == MAMBA:
+        return mamba_mod.init_mamba_state(batch, cfg.d_model, spec, cfg.pdtype)
+    if spec.kind == RWKV:
+        h = cfg.d_model // cfg.rwkv_head_dim
+        return {
+            "shift": jnp.zeros((batch, cfg.d_model), cfg.pdtype),
+            "wkv": jnp.zeros((batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                             jnp.float32),
+            "cm": jnp.zeros((batch, cfg.d_model), cfg.pdtype),
+        }
+    raise ValueError(spec.kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    cache: dict = {}
+    if cfg.prefix:
+        cache["prefix"] = tuple(_layer_cache(cfg, s, batch, seq_len)
+                                for s in cfg.prefix)
+    if cfg.n_periods:
+        one = {f"pos{i}": _layer_cache(cfg, s, batch, seq_len)
+               for i, s in enumerate(cfg.period)}
+        cache["period"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_periods,) + a.shape), one)
+    if cfg.suffix:
+        cache["suffix"] = tuple(_layer_cache(cfg, s, batch, seq_len)
+                                for s in cfg.suffix)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ArchConfig, tokens_or_embeds):
+    if cfg.embed_inputs:
+        x = jnp.take(params["embed"], tokens_or_embeds, axis=0)
+        if cfg.tie_embeddings:           # gemma-style scaled embeddings
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        return x.astype(cfg.cdtype)
+    return tokens_or_embeds.astype(cfg.cdtype)
+
+
+def unembed(params, cfg: ArchConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    return softcap(logits, cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _merge_aux(acc, aux):
+    for k, v in aux.items():
+        acc[k] = acc.get(k, 0.0) + v
+    return acc
+
+
+def _maybe_remat(fn, opts: RunOptions):
+    if opts.remat == "none":
+        return fn
+    if opts.remat == "full":
+        return jax.checkpoint(fn)
+    if opts.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(opts.remat)
+
+
+def forward(params, cfg: ArchConfig, opts: RunOptions, tokens,
+            img_embeds=None):
+    """Training forward: hidden states -> logits (fp32). Also returns aux."""
+    x = embed_inputs(params, cfg, tokens)
+    x = dist_ctx.shard_batch(x)
+    positions = jnp.arange(x.shape[1])
+    aux_acc: dict = {}
+
+    for i, spec in enumerate(cfg.prefix):
+        x, _, aux = apply_layer(x, params["prefix"][i], spec, cfg, opts,
+                                positions=positions, img_embeds=img_embeds,
+                                mode="train")
+        aux_acc = _merge_aux(aux_acc, aux)
+
+    if cfg.n_periods:
+        def body(carry, period_p):
+            h = dist_ctx.shard_batch(carry)
+            auxes: dict = {}
+            for i, spec in enumerate(cfg.period):
+                h, _, aux = apply_layer(h, period_p[f"pos{i}"], spec, cfg, opts,
+                                        positions=positions,
+                                        img_embeds=img_embeds, mode="train")
+                auxes = _merge_aux(auxes, aux)
+            # fixed key-set for scan: always emit both aux scalars
+            out = {"lb_loss": auxes.get("lb_loss", jnp.float32(0)),
+                   "z_loss": auxes.get("z_loss", jnp.float32(0))}
+            return h, out
+
+        if opts.unroll_periods:
+            body_fn = _maybe_remat(body, opts)
+            for pi in range(cfg.n_periods):
+                period_p = jax.tree.map(lambda a: a[pi], params["period"])
+                x, out = body_fn(x, period_p)
+                aux_acc = _merge_aux(aux_acc, out)
+        else:
+            x, period_aux = jax.lax.scan(_maybe_remat(body, opts), x,
+                                         params["period"])
+            aux_acc = _merge_aux(aux_acc, jax.tree.map(jnp.sum, period_aux))
+
+    for i, spec in enumerate(cfg.suffix):
+        x, _, aux = apply_layer(x, params["suffix"][i], spec, cfg, opts,
+                                positions=positions, img_embeds=img_embeds,
+                                mode="train")
+        aux_acc = _merge_aux(aux_acc, aux)
+
+    return x, aux_acc
+
+
+def loss_fn(params, cfg: ArchConfig, opts: RunOptions, batch):
+    """Next-token cross entropy (+ MoE aux). batch: {tokens|embeds, labels, [img_embeds]}."""
+    inputs = batch.get("tokens", batch.get("embeds"))
+    x, aux = forward(params, cfg, opts, inputs, img_embeds=batch.get("img_embeds"))
+    labels = batch["labels"]
+
+    if opts.loss_chunk and x.shape[1] % opts.loss_chunk == 0 and x.shape[1] > opts.loss_chunk:
+        n = x.shape[1] // opts.loss_chunk
+        xc = x.reshape(x.shape[0], n, opts.loss_chunk, x.shape[2]).swapaxes(0, 1)
+        lc = labels.reshape(labels.shape[0], n, opts.loss_chunk).swapaxes(0, 1)
+
+        def chunk_ce(carry, inp):
+            xs, ls = inp
+            logits = unembed(params, cfg, xs)
+            ce = _ce(logits, ls)
+            return carry + ce, None
+        total, _ = jax.lax.scan(chunk_ce, jnp.float32(0), (xc, lc))
+        ce = total / n
+    else:
+        logits = unembed(params, cfg, x)
+        ce = _ce(logits, labels)
+
+    loss = ce
+    metrics = {"ce": ce}
+    if "lb_loss" in aux:
+        loss = loss + opts.lb_loss_weight * aux["lb_loss"] \
+                    + opts.z_loss_weight * aux["z_loss"]
+        metrics.update({k: v for k, v in aux.items()})
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _ce(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def prefill(params, cfg: ArchConfig, opts: RunOptions, tokens, img_embeds=None):
+    """Process a prompt; return (last-token logits, cache)."""
+    x = embed_inputs(params, cfg, tokens)
+    x = dist_ctx.shard_batch(x)
+    positions = jnp.arange(x.shape[1])
+    caches: dict = {}
+
+    pre = []
+    for i, spec in enumerate(cfg.prefix):
+        x, c, _ = apply_layer(x, params["prefix"][i], spec, cfg, opts,
+                              positions=positions, img_embeds=img_embeds,
+                              mode="prefill")
+        pre.append(c)
+    if pre:
+        caches["prefix"] = tuple(pre)
+
+    if cfg.n_periods:
+        def body(h, period_p):
+            h = dist_ctx.shard_batch(h)
+            cs = {}
+            for i, spec in enumerate(cfg.period):
+                h, c, _ = apply_layer(h, period_p[f"pos{i}"], spec, cfg, opts,
+                                      positions=positions,
+                                      img_embeds=img_embeds, mode="prefill")
+                cs[f"pos{i}"] = c
+            return h, cs
+        if opts.unroll_periods:
+            body_fn = _maybe_remat(body, opts)
+            cache_list = []
+            for pi in range(cfg.n_periods):
+                period_p = jax.tree.map(lambda a: a[pi], params["period"])
+                x, cs = body_fn(x, period_p)
+                cache_list.append(cs)
+            caches["period"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                            *cache_list)
+        else:
+            x, period_caches = jax.lax.scan(_maybe_remat(body, opts), x,
+                                            params["period"])
+            caches["period"] = period_caches
+
+    suf = []
+    for i, spec in enumerate(cfg.suffix):
+        x, c, _ = apply_layer(x, params["suffix"][i], spec, cfg, opts,
+                              positions=positions, img_embeds=img_embeds,
+                              mode="prefill")
+        suf.append(c)
+    if suf:
+        caches["suffix"] = tuple(suf)
+
+    logits = unembed(params, cfg, x[:, -1:])
+    return logits, caches
+
+
+def decode_step(params, cfg: ArchConfig, opts: RunOptions, tokens, cache, pos):
+    """One decode step. tokens: (B, 1) ids or (B, 1, d) embeds; pos: scalar."""
+    x = embed_inputs(params, cfg, tokens)
+    x = dist_ctx.shard_batch(x)
+    new_cache: dict = {}
+
+    pre = []
+    for i, spec in enumerate(cfg.prefix):
+        x, c, _ = apply_layer(x, params["prefix"][i], spec, cfg, opts,
+                              cache=cache["prefix"][i], pos=pos, mode="decode")
+        pre.append(c)
+    if pre:
+        new_cache["prefix"] = tuple(pre)
+
+    if cfg.n_periods:
+        def body(h, xs):
+            period_p, period_c = xs
+            h = dist_ctx.shard_batch(h)
+            cs = {}
+            for i, spec in enumerate(cfg.period):
+                h, c, _ = apply_layer(h, period_p[f"pos{i}"], spec, cfg, opts,
+                                      cache=period_c[f"pos{i}"], pos=pos,
+                                      mode="decode")
+                cs[f"pos{i}"] = c
+            return h, cs
+        if opts.unroll_periods:
+            cache_list = []
+            for pi in range(cfg.n_periods):
+                sl = jax.tree.map(lambda a: a[pi],
+                                  (params["period"], cache["period"]))
+                x, cs = body(x, sl)
+                cache_list.append(cs)
+            new_cache["period"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                               *cache_list)
+        else:
+            x, period_caches = jax.lax.scan(body, x,
+                                            (params["period"], cache["period"]))
+            new_cache["period"] = period_caches
+
+    suf = []
+    for i, spec in enumerate(cfg.suffix):
+        x, c, _ = apply_layer(x, params["suffix"][i], spec, cfg, opts,
+                              cache=cache["suffix"][i], pos=pos, mode="decode")
+        suf.append(c)
+    if suf:
+        new_cache["suffix"] = tuple(suf)
+
+    logits = unembed(params, cfg, x)
+    return logits, new_cache

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN (token-choice top-k routing, capacity-truncated).
+
+Dispatch strategy: token-choice top-k gates are computed per token; each
+expert then takes its top-C tokens by gate weight (capacity truncation of the
+token-choice assignment), is applied as a batched (E, C, d) einsum — which
+shards cleanly over the ``model`` mesh axis (expert parallelism) — and
+results are scatter-added back.  Memory is O(E*C*d) = O(top_k * cap_factor *
+tokens * d), never O(tokens * E * C).
+
+Router math runs in fp32 (paper §1.1: Solar Open hit instability from a
+router dtype mismatch after sigmoid — 13.7% speedup on fix; we keep the
+router numerically isolated by construction).
+
+Aux outputs: load-balance loss (Switch-style) and router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoESpec
+from repro.models.layers import swiglu
+
+
+def init_moe(rng, d_model: int, spec: MoESpec, dtype):
+    from repro.models.layers import normal_init
+    ks = jax.random.split(rng, 8)
+    p = {
+        "router": normal_init(ks[0], (d_model, spec.n_experts), jnp.float32),
+        "w_gate": normal_init(ks[1], (spec.n_experts, d_model, spec.d_expert), dtype),
+        "w_up": normal_init(ks[2], (spec.n_experts, d_model, spec.d_expert), dtype),
+        "w_down": normal_init(ks[3], (spec.n_experts, spec.d_expert, d_model), dtype),
+    }
+    if spec.n_shared:
+        f = spec.n_shared * spec.d_expert
+        p["shared"] = {
+            "w_gate": normal_init(ks[4], (d_model, f), dtype),
+            "w_up": normal_init(ks[5], (d_model, f), dtype),
+            "w_down": normal_init(ks[6], (f, d_model), dtype),
+        }
+    return p
+
+
+def moe_ffn(x, p, spec: MoESpec, *, capacity: int | None = None,
+            constraints: bool = False):
+    """x: (B, S, d) -> (B, S, d), aux dict of scalar losses.
+
+    ``constraints=True`` pins the dispatch tensors to the EP layout
+    (experts -> model axis, capacity tokens -> batch axes) — the §Perf
+    collective-term fix for MoE cells."""
+    from repro.distributed import context as dist_ctx
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    e, k = spec.n_experts, spec.top_k
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                  # (t, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # token-choice gate matrix (t, e): weight of token for its chosen experts
+    gate_mat = jnp.sum(
+        jax.nn.one_hot(gate_idx, e, dtype=jnp.float32) * gate_vals[..., None],
+        axis=1)
+
+    # capacity truncation: each expert keeps its top-C tokens by gate weight.
+    # Small token counts (decode / tiny batches) use exact routing so that
+    # decode(x_t) == forward(x)[t] — capacity drops are a throughput trade
+    # that only makes sense at scale.
+    if capacity is None:
+        if t <= 256:
+            capacity = t
+        else:
+            capacity = max(int(k * t / e * spec.capacity_factor), 1)
+    capacity = min(capacity, t)
+    w_ec, idx_ec = jax.lax.top_k(gate_mat.T, capacity)             # (e, C)
+    if constraints:
+        w_ec = dist_ctx.shard_experts(w_ec)
+        idx_ec = dist_ctx.shard_experts(idx_ec)
+
+    xe = jnp.take(xf, idx_ec.reshape(-1), axis=0).reshape(e, capacity, d)
+    if constraints:
+        xe = dist_ctx.shard_experts(xe)
+    # batched expert FFN (shards over the expert axis -> EP)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    if constraints:
+        ye = dist_ctx.shard_experts(ye)
+    ye = ye * w_ec[..., None].astype(ye.dtype)
+
+    out = jnp.zeros((t, d), ye.dtype).at[idx_ec.reshape(-1)].add(
+        ye.reshape(-1, d), mode="drop")
+    if constraints:
+        out = dist_ctx.shard_batch(out)
+
+    if spec.n_shared:
+        out = out + swiglu(xf, **{k_: v for k_, v in p["shared"].items()})
+
+    # Switch load-balance loss + z-loss
+    frac_tokens = jnp.mean(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32).sum(1), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    lb_loss = e * jnp.sum(frac_tokens * frac_probs) / k
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss}
+    return out.reshape(b, s, d).astype(x.dtype), aux

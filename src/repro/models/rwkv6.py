@@ -1,0 +1,125 @@
+"""RWKV-6 "Finch" block (data-dependent decay linear attention).
+
+Time-mix: per-head matrix-valued state S (B, H, Dk, Dv) with per-channel
+data-dependent decay; Channel-mix: squared-ReLU FFN with token shift.
+
+Backends:
+* ``sequential`` — lax.scan over time (O(1) memory, the decode recurrence).
+* ``chunked``    — block-parallel linear attention (matmul form, MXU
+  friendly); see ``repro.kernels.rwkv6_scan`` for the Pallas TPU kernel and
+  its pure-jnp oracle (shared with this module).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init, group_norm_heads, token_shift
+
+
+def init_rwkv(rng, d_model: int, d_ff: int, head_dim: int, dtype):
+    h = d_model // head_dim
+    ks = jax.random.split(rng, 16)
+    lora = 64
+    return {
+        # time mix
+        "maa_x": jnp.zeros((d_model,), dtype),
+        "maa_wkvrg": jnp.zeros((5, d_model), dtype),
+        "maa_w1": normal_init(ks[0], (d_model, 5 * 32), dtype),
+        "maa_w2": normal_init(ks[1], (5, 32, d_model), dtype),
+        "decay": normal_init(ks[2], (d_model,), jnp.float32, scale=0.5),
+        "decay_w1": normal_init(ks[3], (d_model, lora), dtype),
+        "decay_w2": normal_init(ks[4], (lora, d_model), dtype),
+        "first": normal_init(ks[5], (h, head_dim), jnp.float32),  # u bonus
+        "Wr": normal_init(ks[6], (d_model, d_model), dtype),
+        "Wk": normal_init(ks[7], (d_model, d_model), dtype),
+        "Wv": normal_init(ks[8], (d_model, d_model), dtype),
+        "Wg": normal_init(ks[9], (d_model, d_model), dtype),
+        "Wo": normal_init(ks[10], (d_model, d_model), dtype),
+        "ln_x_scale": jnp.ones((d_model,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d_model,), jnp.float32),
+        # channel mix
+        "cm_maa_k": jnp.zeros((d_model,), dtype),
+        "cm_maa_r": jnp.zeros((d_model,), dtype),
+        "cm_Wk": normal_init(ks[11], (d_model, d_ff), dtype),
+        "cm_Wv": normal_init(ks[12], (d_ff, d_model), dtype),
+        "cm_Wr": normal_init(ks[13], (d_model, d_model), dtype),
+    }
+
+
+def wkv_sequential(r, k, v, w, u, s0):
+    """r,k,v: (B,S,H,D); w (decay in (0,1)): (B,S,H,D); u: (H,D); s0: (B,H,D,D).
+
+    y_t = r_t . (diag(u) k_t v_t^T + S_{t-1});  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (y (B,S,H,D), s_final).
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), s
+
+
+def wkv_chunked(r, k, v, w, u, s0, chunk_size: int = 64):
+    """Block-parallel WKV6 (matmul form). Same contract as wkv_sequential."""
+    from repro.kernels.rwkv6_scan import ref as wkv_ref
+    return wkv_ref.wkv6_chunked(r, k, v, w, u, s0, chunk_size=chunk_size)
+
+
+def time_mix(x, p, head_dim: int, *, state=None, backend="sequential",
+             chunk_size: int = 64):
+    """state: None or {"shift": (B,d), "wkv": (B,H,D,D)} -> (y, new_state)."""
+    b, s, d = x.shape
+    h = d // head_dim
+    prev = None if state is None else state["shift"]
+    xx = token_shift(x, prev) - x
+    xxx = x + xx * p["maa_x"][None, None]
+    mixed = jnp.tanh(jnp.einsum("bsd,df->bsf", xxx, p["maa_w1"]))
+    mixed = mixed.reshape(b, s, 5, 32)
+    maa = jnp.einsum("bsmf,mfd->bsmd", mixed, p["maa_w2"])  # (B,S,5,d)
+    maa = maa + p["maa_wkvrg"][None, None]
+    xw, xk, xv, xr, xg = [x + xx * maa[:, :, i] for i in range(5)]
+
+    w_log = p["decay"][None, None].astype(jnp.float32) + \
+        jnp.einsum("bsf,fd->bsd",
+                   jnp.tanh(jnp.einsum("bsd,df->bsf", xw, p["decay_w1"])),
+                   p["decay_w2"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log))                             # (B,S,d) in (0,1)
+
+    def heads(t):
+        return t.reshape(b, s, h, head_dim)
+
+    r = heads(jnp.einsum("bsd,de->bse", xr, p["Wr"])).astype(jnp.float32)
+    k = heads(jnp.einsum("bsd,de->bse", xk, p["Wk"])).astype(jnp.float32)
+    v = heads(jnp.einsum("bsd,de->bse", xv, p["Wv"])).astype(jnp.float32)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["Wg"]))
+    wh = w.reshape(b, s, h, head_dim)
+
+    s0 = jnp.zeros((b, h, head_dim, head_dim), jnp.float32) if state is None \
+        else state["wkv"]
+    if backend == "chunked" and s > 1:
+        y, s_out = wkv_chunked(r, k, v, wh, p["first"], s0, chunk_size=chunk_size)
+    else:
+        y, s_out = wkv_sequential(r, k, v, wh, p["first"], s0)
+
+    y = group_norm_heads(y, p["ln_x_scale"].reshape(h, head_dim),
+                         p["ln_x_bias"].reshape(h, head_dim))
+    y = y.reshape(b, s, d).astype(x.dtype) * g
+    out = jnp.einsum("bsd,de->bse", y, p["Wo"])
+    new_state = {"shift": x[:, -1], "wkv": s_out}
+    return out, new_state
+
+
+def channel_mix(x, p, *, state=None):
+    prev = None if state is None else state
+    xx = token_shift(x, prev) - x
+    xk = x + xx * p["cm_maa_k"][None, None]
+    xr = x + xx * p["cm_maa_r"][None, None]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["cm_Wk"])))
+    kv = jnp.einsum("bsf,fd->bsd", kk, p["cm_Wv"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_Wr"])) * kv
+    return out, x[:, -1]

@@ -1,0 +1,84 @@
+"""AdamW with decoupled weight decay, fp32 states, global-norm clipping.
+
+States are plain pytrees mirroring the parameters, so the distributed layer
+shards them with exactly the same PartitionSpecs as the parameters (ZeRO-style
+optimizer sharding falls out of FSDP param sharding for free).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # () int32
+    mu: Any                    # fp32 pytree
+    nu: Any                    # fp32 pytree
+
+
+class _Upd(NamedTuple):
+    p: Any
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def schedule(self, step):
+        """Linear warmup + cosine decay to min_lr_ratio."""
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        frac = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return self.lr * warm * (self.min_lr_ratio + (1 - self.min_lr_ratio) * cos)
+
+    def update(self, grads, state: AdamWState, params):
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mhat = m / b1c
+            vhat = v / b2c
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return _Upd((p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v)
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        is_upd = lambda t: isinstance(t, _Upd)
+        new_params = jax.tree.map(lambda t: t.p, out, is_leaf=is_upd)
+        new_mu = jax.tree.map(lambda t: t.m, out, is_leaf=is_upd)
+        new_nu = jax.tree.map(lambda t: t.v, out, is_leaf=is_upd)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), metrics
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))

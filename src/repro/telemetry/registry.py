@@ -1,0 +1,87 @@
+"""Prometheus-style metric registry (counters + gauges) with a scrape loop.
+
+The production pipeline in the paper scrapes 4 exporters x 63 nodes at 30 s
+intervals into VictoriaMetrics (~751 unique metric names).  This module is
+the in-process stand-in: exporters write samples, the registry scrapes into
+the time-series store, and the precursor detector reads windows back.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+SCRAPE_INTERVAL_S = 30.0
+
+
+@dataclass
+class MetricMeta:
+    name: str
+    kind: str            # "counter" | "gauge"
+    exporter: str        # dcgm | node | all_smi | backendai
+    help: str = ""
+
+
+class MetricRegistry:
+    """Holds current values per (metric, node) and scrapes them into a store."""
+
+    def __init__(self, n_nodes: int):
+        self.n_nodes = n_nodes
+        self.meta: Dict[str, MetricMeta] = {}
+        self.values: Dict[str, np.ndarray] = {}
+
+    def register(self, meta: MetricMeta):
+        if meta.name in self.meta:
+            return
+        self.meta[meta.name] = meta
+        self.values[meta.name] = np.zeros(self.n_nodes, dtype=np.float64)
+
+    def set(self, name: str, node: int, value: float):
+        self.values[name][node] = value
+
+    def add(self, name: str, node: int, delta: float):
+        self.values[name][node] += delta
+
+    def set_all(self, name: str, values: np.ndarray):
+        self.values[name][:] = values
+
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        return {k: v.copy() for k, v in self.values.items()}
+
+    @property
+    def n_metrics(self) -> int:
+        return len(self.meta)
+
+
+class TimeSeriesStore:
+    """Column store: metric -> (n_ticks, n_nodes) array.  VictoriaMetrics
+    stand-in; everything the precursor analysis needs is window queries."""
+
+    def __init__(self, n_nodes: int):
+        self.n_nodes = n_nodes
+        self.ticks: List[float] = []
+        self.data: Dict[str, List[np.ndarray]] = {}
+
+    def append(self, t: float, snapshot: Dict[str, np.ndarray]):
+        self.ticks.append(t)
+        for name, vals in snapshot.items():
+            self.data.setdefault(name, []).append(vals)
+
+    def series(self, name: str) -> np.ndarray:
+        return np.asarray(self.data[name])          # (n_ticks, n_nodes)
+
+    def window(self, name: str, t0: float, t1: float) -> np.ndarray:
+        ts = np.asarray(self.ticks)
+        m = (ts >= t0) & (ts < t1)
+        return np.asarray(self.data[name])[m]
+
+    def times(self) -> np.ndarray:
+        return np.asarray(self.ticks)
+
+    @property
+    def names(self):
+        return list(self.data)
+
+    def nbytes(self) -> int:
+        return sum(len(v) * self.n_nodes * 8 for v in self.data.values())

@@ -1,0 +1,20 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the real single
+CPU device; only launch/dryrun.py forces the 512-device host platform."""
+import os
+import sys
+from pathlib import Path
+
+# allow `pytest tests/` without PYTHONPATH=src
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,221 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.youngdaly import (cost_fraction, mc_cost_fraction,
+                                        t_opt_s)
+from repro.core.retry import RetryConfig, RetryEngine, RetryPolicy
+from repro.core.scheduler import GangScheduler
+from repro.core.session import Session, SessionState
+from repro.core.xid import XID_TABLE, Resolution, requires_isolation
+
+
+# ---------------------------------------------------------------------------
+# Young/Daly
+# ---------------------------------------------------------------------------
+
+@given(delta=st.floats(1.0, 300.0), mtbf=st.floats(1.0, 1000.0))
+@settings(max_examples=60, deadline=None)
+def test_t_opt_minimizes_cost(delta, mtbf):
+    t = t_opt_s(delta, mtbf)
+    c0 = cost_fraction(t, delta, mtbf)
+    for factor in (0.5, 0.8, 1.25, 2.0):
+        assert c0 <= cost_fraction(t * factor, delta, mtbf) + 1e-12
+
+
+@given(delta=st.floats(5.0, 60.0), mtbf=st.floats(10.0, 200.0))
+@settings(max_examples=10, deadline=None)
+def test_analytic_cost_matches_monte_carlo(delta, mtbf):
+    t = t_opt_s(delta, mtbf)
+    analytic = cost_fraction(t, delta, mtbf)
+    mc = mc_cost_fraction(t, delta, mtbf, n=40_000, seed=1)
+    assert abs(analytic - mc) < 0.35 * analytic + 0.003
+
+
+@given(delta=st.floats(1.0, 100.0), mtbf=st.floats(1.0, 500.0))
+@settings(max_examples=50, deadline=None)
+def test_t_opt_formula(delta, mtbf):
+    assert math.isclose(t_opt_s(delta, mtbf),
+                        math.sqrt(2 * delta * mtbf * 3600), rel_tol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# gang scheduler: all-or-nothing
+# ---------------------------------------------------------------------------
+
+@given(n_nodes=st.integers(4, 80), job=st.integers(1, 90),
+       n_down=st.integers(0, 20))
+@settings(max_examples=80, deadline=None)
+def test_gang_all_or_nothing(n_nodes, job, n_down):
+    sched = GangScheduler(n_nodes=n_nodes)
+    n_down = min(n_down, n_nodes)
+    for i in range(n_down):
+        sched.mark_down(i, 0.0, "test")
+    s = Session(task_name="t", n_nodes=job)
+    ok = sched.try_allocate(s, 0.0)
+    allocated = sum(1 for n in sched.nodes if n.allocated_to == s.session_id)
+    if ok:
+        assert allocated == job == len(s.nodes)
+        # no double allocation, no unhealthy node allocated
+        assert all(sched.nodes[i].healthy for i in s.nodes)
+    else:
+        assert allocated == 0 and s.nodes == []
+        assert n_nodes - n_down < job
+
+
+@given(n_jobs=st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_gang_release_restores_pool(n_jobs):
+    sched = GangScheduler(n_nodes=30)
+    sessions = []
+    for i in range(n_jobs):
+        s = Session(task_name=f"t{i}", n_nodes=7)
+        if sched.try_allocate(s, 0.0):
+            sessions.append(s)
+    for s in sessions:
+        sched.release(s, 1.0)
+    assert len(sched.free_nodes()) == 30
+
+
+# ---------------------------------------------------------------------------
+# session FSM
+# ---------------------------------------------------------------------------
+
+def test_session_legal_lifecycle():
+    s = Session(task_name="t", n_nodes=60)
+    s.transition(SessionState.SCHEDULED, 0.0)
+    s.transition(SessionState.PREPARING, 0.1)
+    s.transition(SessionState.RUNNING, 0.6)
+    assert s.reached_training
+    s.transition(SessionState.TERMINATING, 5.0)
+    s.transition(SessionState.TERMINATED, 5.2)
+    assert s.is_terminal and s.elapsed_running_h() == pytest.approx(4.6)
+
+
+@given(st.sampled_from(list(SessionState)))
+@settings(max_examples=20, deadline=None)
+def test_session_illegal_transitions_raise(target):
+    s = Session(task_name="t", n_nodes=1)   # PENDING
+    legal = {SessionState.SCHEDULED, SessionState.CANCELLED,
+             SessionState.ERROR}
+    if target in legal:
+        s.transition(target, 0.0)
+    else:
+        with pytest.raises(ValueError):
+            s.transition(target, 0.0)
+
+
+def test_session_hang_detection():
+    s = Session(task_name="t", n_nodes=60)
+    s.transition(SessionState.SCHEDULED, 0.0)
+    s.transition(SessionState.PREPARING, 0.0)
+    assert not s.hang_check(0.5)
+    assert s.hang_check(1.5)       # PREPARING limit is 1 h
+
+
+# ---------------------------------------------------------------------------
+# retry policies
+# ---------------------------------------------------------------------------
+
+@given(attempt=st.integers(1, 29))
+@settings(max_examples=40, deadline=None)
+def test_fixed_policy_constant_delay(attempt):
+    eng = RetryEngine(RetryConfig(policy=RetryPolicy.FIXED))
+    d = eng.next_delay_min(attempt)
+    assert d == pytest.approx(11.0)   # 10 min delay + 1 min teardown
+
+
+@given(attempt=st.integers(1, 29))
+@settings(max_examples=40, deadline=None)
+def test_backoff_monotone_and_capped(attempt):
+    eng = RetryEngine(RetryConfig(policy=RetryPolicy.EXP_BACKOFF))
+    d1 = eng.next_delay_min(attempt)
+    d2 = eng.next_delay_min(attempt + 1)
+    assert d2 >= d1
+    assert d1 <= 80.0 + 1.0
+
+
+def test_xid_branching_matches_table3():
+    eng = RetryEngine(RetryConfig(policy=RetryPolicy.XID_BRANCH))
+    # RESTART_APP -> immediate (teardown only)
+    for xid in (31, 43, 94):
+        assert eng.next_delay_min(1, xid=xid) == pytest.approx(1.0)
+    # RESET_GPU -> device reset first
+    for xid in (119, 145, 149):
+        assert eng.next_delay_min(1, xid=xid) == pytest.approx(7.0)
+    # RESTART_BM -> stop and page operators
+    assert eng.next_delay_min(1, xid=79) is None
+
+
+def test_max_retries_stops():
+    eng = RetryEngine(RetryConfig(policy=RetryPolicy.FIXED, max_retries=5))
+    assert eng.next_delay_min(5) is not None
+    assert eng.next_delay_min(6) is None
+
+
+def test_xid_table_consistency():
+    for code, info in XID_TABLE.items():
+        assert info.code == code
+        assert requires_isolation(code) == info.hardware
+    assert XID_TABLE[79].resolution is Resolution.RESTART_BM
+    assert XID_TABLE[94].resolution is Resolution.RESTART_APP
+
+
+# ---------------------------------------------------------------------------
+# NFS RPC simulator invariants
+# ---------------------------------------------------------------------------
+
+@given(total_mb=st.integers(1, 2048), slots=st.integers(1, 256))
+@settings(max_examples=30, deadline=None)
+def test_rpc_conservation_and_slot_bound(total_mb, slots):
+    import dataclasses
+
+    from repro.checkpoint.storage import NFSClientSim, NFSConfig
+
+    cfg = dataclasses.replace(NFSConfig(), n_slots=slots, service_jitter=0.0)
+    sim = NFSClientSim(cfg, seed=0)
+    res = sim.transfer("write", total_mb << 20, keep_results=True)
+    # all bytes moved in ceil(bytes/wsize) RPCs
+    assert res.n_rpcs == -(-(total_mb << 20) // cfg.wsize)
+    # concurrency never exceeds the slot count: at any finish time, the
+    # number of in-flight rpcs <= slots  (checked via start/finish ordering)
+    events = []
+    for r in res.results:
+        start = r.arrival_s + r.slot_wait_s
+        events.append((start, 1))
+        events.append((start + r.service_s, -1))
+    events.sort()
+    live = peak = 0
+    for _, delta in events:
+        live += delta
+        peak = max(peak, live)
+    assert peak <= slots
+
+
+@given(rate=st.floats(100.0, 20000.0))
+@settings(max_examples=15, deadline=None)
+def test_rpc_throughput_capped_by_slots(rate):
+    from repro.checkpoint.storage import NFSClientSim
+
+    sim = NFSClientSim(seed=0)
+    res = sim.transfer("read", 2 << 30, arrival_rate_rpcs_s=rate)
+    cap = sim.config.n_slots / sim.config.read_service_s
+    assert res.request_rate_s <= max(cap * 1.35, rate * 1.05)
+
+
+def test_bandwidth_paradox_is_slot_bound():
+    """Doubling slots ~halves save time; the link is never the limit."""
+    import dataclasses
+
+    from repro.checkpoint.storage import NFSClientSim, NFSConfig, LINK_BW_BYTES
+
+    base = NFSClientSim(NFSConfig(service_jitter=0.0), seed=0)
+    w1 = base.checkpoint_save(4 << 30)
+    dbl = NFSClientSim(dataclasses.replace(NFSConfig(service_jitter=0.0),
+                                           n_slots=256), seed=0)
+    w2 = dbl.checkpoint_save(4 << 30)
+    assert w2.duration_s < 0.6 * w1.duration_s
+    assert w1.bandwidth_bytes_s < 0.2 * LINK_BW_BYTES   # the paradox

@@ -1,0 +1,221 @@
+"""Operational pipeline: precursor detection, cluster sim, exclusion,
+data pipeline, health checks, telemetry."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.exclusion import ExclusionTracker
+from repro.core.failures import FailureInjector
+from repro.core.precursor import (DetectorConfig, PrecursorDetector,
+                                  evaluate, robust_peer_z)
+from repro.telemetry.exporters import ExporterSuite, NodeState
+from repro.telemetry.registry import TimeSeriesStore
+
+
+# ---------------------------------------------------------------------------
+# robust z / detector
+# ---------------------------------------------------------------------------
+
+@given(st.integers(8, 64), st.floats(10.0, 1e6))
+@settings(max_examples=40, deadline=None)
+def test_robust_z_flags_outlier(n, scale):
+    rng = np.random.default_rng(int(scale) % 7919)
+    vals = rng.normal(100.0, 1.0, n)
+    vals[3] += 50 * scale / scale * 50   # gross outlier
+    z = robust_peer_z(vals)
+    assert abs(z[3]) > 6
+    # small samples can throw 1-2 extra tails past 6 MAD-sigmas; the vote
+    # (min_signals metrics) is what suppresses these in the detector
+    assert np.sum(np.abs(z) > 6) <= max(3, n // 4)
+
+
+def test_robust_z_constant_series_no_alarm():
+    z = robust_peer_z(np.full(63, 42.0))
+    assert np.all(np.abs(z) < 1e-3)
+
+
+def _make_store(n_ticks=200, n_nodes=16, fail_node=None, fail_tick=None,
+                seed=0):
+    rng = np.random.default_rng(seed)
+    store = TimeSeriesStore(n_nodes)
+    for t in range(n_ticks):
+        snap = {
+            "DCGM_FI_DEV_GPU_UTIL": np.full(n_nodes, 99.0)
+            + rng.normal(0, 0.3, n_nodes),
+            "m1": rng.normal(100, 1, n_nodes),
+            "m2": rng.normal(50, 2, n_nodes),
+            "m3": rng.normal(10, 0.5, n_nodes),
+            "m4": rng.normal(5, 0.2, n_nodes),
+        }
+        if fail_node is not None and t == fail_tick:
+            for m in ("m1", "m2", "m3", "m4"):
+                snap[m][fail_node] += 500
+            snap["DCGM_FI_DEV_GPU_UTIL"][fail_node] = 0.0
+        store.append(t * 30 / 3600.0, snap)
+    return store
+
+
+def test_detector_finds_injected_anomaly():
+    store = _make_store(fail_node=5, fail_tick=120)
+    alarms = PrecursorDetector(DetectorConfig(min_signals=3)).scan(store)
+    assert any(a.node == 5 and a.tick == 120 for a in alarms)
+
+
+def test_detector_low_fp_on_pure_noise():
+    store = _make_store()
+    alarms = PrecursorDetector(DetectorConfig(min_signals=3)).scan(store)
+    # 200 ticks x 16 nodes of well-behaved noise: no multi-signal alarms
+    assert len(alarms) <= 2
+
+
+@given(st.integers(0, 15))
+@settings(max_examples=10, deadline=None)
+def test_detector_node_identification(node):
+    store = _make_store(fail_node=node, fail_tick=77, seed=node)
+    alarms = PrecursorDetector(DetectorConfig(min_signals=3)).scan(store)
+    hits = [a for a in alarms if a.tick == 77]
+    assert hits and hits[0].node == node
+
+
+def test_evaluate_pre_xid_and_fp_accounting():
+    from repro.core.failures import FailureEvent
+    store = _make_store(fail_node=2, fail_tick=100)
+    alarms = PrecursorDetector(DetectorConfig(min_signals=3)).scan(store)
+    ev_time = 100 * 30 / 3600.0
+    failures = [FailureEvent(time_h=ev_time, node=2, kind="xid", xid=94)]
+    res = evaluate(alarms, failures, duration_h=200 * 30 / 3600.0)
+    assert res.detected == 1
+    assert res.pre_xid == 0          # abrupt signature -> at-XID detection
+
+
+# ---------------------------------------------------------------------------
+# failure injector
+# ---------------------------------------------------------------------------
+
+def test_injector_mtbf_statistics():
+    inj = FailureInjector(mtbf_h=56.2, seed=0)
+    events = inj.sample(3000 * 24.0)
+    gaps = np.diff([0.0] + [e.time_h for e in events])
+    assert abs(np.mean(gaps) - 56.2) < 6.0
+
+
+def test_injector_hot_node_concentration():
+    inj = FailureInjector(seed=1)
+    events = inj.sample(2000 * 24.0)
+    counts = np.bincount([e.node for e in events], minlength=63)
+    top3 = np.sort(counts)[::-1][:3].sum()
+    assert top3 / counts.sum() > 0.35    # concentrated (paper: >50% of excl.)
+
+
+def test_injector_mix_covers_paper_categories():
+    inj = FailureInjector(seed=2)
+    events = inj.sample(3000 * 24.0)
+    kinds = {e.kind for e in events}
+    assert kinds == {"xid", "unreachable", "fail_slow"}
+    xids = {e.xid for e in events if e.kind == "xid"}
+    assert {145, 94, 79}.issubset(xids)
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def test_exporter_metric_count_realistic():
+    suite = ExporterSuite(4, seed=0)
+    assert suite.reg.n_metrics >= 300    # ~305 analysis-active in the paper
+
+
+def test_exporter_nvlink_signature():
+    from repro.core.failures import FailureEvent
+    suite = ExporterSuite(8, seed=0)
+    states = [NodeState(training=True) for _ in range(8)]
+    ev = FailureEvent(time_h=1.0, node=3, kind="xid", xid=145)
+    snap = suite.tick(1.0, states, [ev])
+    # paper Fig 2: interrupts collapse ~300K -> 70-100K; procs_running -> 0
+    assert snap["node_intr_total"][3] < 150e3
+    assert snap["node_procs_running"][3] == 0
+    healthy = np.delete(snap["node_intr_total"], 3)
+    assert np.all(healthy > 250e3)
+
+
+def test_exporter_ecc_signature():
+    from repro.core.failures import FailureEvent
+    suite = ExporterSuite(8, seed=0)
+    states = [NodeState(training=True) for _ in range(8)]
+    ev = FailureEvent(time_h=1.0, node=2, kind="xid", xid=94)
+    snap = suite.tick(1.0, states, [ev])
+    getattr_m = "node_mountstats_nfs_operations_response_time_seconds_total:GETATTR"
+    assert snap[getattr_m][2] > 10 * np.median(np.delete(snap[getattr_m], 2))
+    assert snap["node_vmstat_pgpgout"][2] > 5 * np.median(
+        np.delete(snap["node_vmstat_pgpgout"], 2))
+    assert suite.remap_uncorr[2] >= 1
+
+
+# ---------------------------------------------------------------------------
+# exclusion tracker
+# ---------------------------------------------------------------------------
+
+def test_exclusion_concentration_math():
+    tr = ExclusionTracker(n_nodes=10)
+    # node 9 always excluded deliberately; others excluded once each
+    for i in range(8):
+        tr.record_session(i, i + 1.0, [n for n in range(10)
+                                       if n not in (9, i)],
+                          {9: "slow"})
+    s = tr.summary()
+    assert 9 in s["top3_nodes"]
+    assert s["top3_share"] > 0.5
+    overlap = tr.deliberate_overlap()
+    assert overlap[9] == 1.0
+    assert overlap.get(0, 0.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_rank_sharded_pipeline_roundtrip(tmp_path):
+    from repro.data.pipeline import (DataConfig, RankShardReader,
+                                     build_sharded_dataset)
+    cfg = DataConfig(vocab_size=512, seq_len=32, tokens_per_shard=1 << 12)
+    build_sharded_dataset(tmp_path, n_ranks=3, cfg=cfg)
+    readers = [RankShardReader(tmp_path, r, cfg, batch_per_rank=2)
+               for r in range(3)]
+    b0 = next(readers[0])
+    assert b0["tokens"].shape == (2, 32)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+    # ranks see disjoint streams
+    b1 = next(readers[1])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    # unknown rank -> clear error
+    with pytest.raises(KeyError):
+        RankShardReader(tmp_path, 7, cfg, 1)
+
+
+def test_io_sharding_cliff():
+    """§3.5: the contention cliff exists at 60 nodes but NOT at 2-4 nodes."""
+    from repro.data.pipeline import init_time_model
+    shared_60 = init_time_model(60, 2000, 6, 200e9, sharded=False)
+    shard_60 = init_time_model(60, 2000, 6, 200e9, sharded=True)
+    shared_4 = init_time_model(4, 2000, 6, 200e9, sharded=False)
+    assert shared_60 > 8 * 3600          # >8h (paper)
+    assert shard_60 < 10 * 60            # <10min (paper: ~8min)
+    assert shared_4 < 0.25 * shared_60 / 15   # small-scale tests mislead
+
+
+# ---------------------------------------------------------------------------
+# health checks
+# ---------------------------------------------------------------------------
+
+def test_health_monitor_layers():
+    from repro.core.health import (HealthLayer, HealthMonitor, Probe,
+                                   device_liveness_probe)
+    mon = HealthMonitor()
+    mon.register(0, Probe(HealthLayer.DEVICE, device_liveness_probe))
+    mon.register(0, Probe(HealthLayer.AGENT_RPC, lambda: True))
+    mon.register(1, Probe(HealthLayer.AGENT_RPC, lambda: False))
+    reports = mon.sweep()
+    assert reports[0].healthy
+    assert not reports[1].healthy
+    assert reports[1].failing_layers == [HealthLayer.AGENT_RPC]

@@ -1,0 +1,79 @@
+"""Straggler detection + elastic allocation (beyond-paper features)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import GangScheduler
+from repro.core.session import Session
+from repro.core.straggler import StragglerConfig, StragglerDetector
+
+
+def test_straggler_flags_sustained_slow_node():
+    det = StragglerDetector(8, StragglerConfig(sustain=4))
+    rng = np.random.default_rng(0)
+    reports = []
+    for step in range(40):
+        t = rng.normal(1.0, 0.02, 8)
+        if step >= 20:
+            t[5] *= 1.4                 # node 5 degrades at step 20
+        reports += det.observe(t)
+    assert reports and reports[0].node == 5
+    assert 20 < reports[0].step <= 20 + 10
+    assert det.job_slowdown() > 1.1
+
+
+def test_straggler_no_false_flags_on_noise():
+    det = StragglerDetector(16, StragglerConfig(sustain=4))
+    rng = np.random.default_rng(1)
+    reports = []
+    for _ in range(60):
+        reports += det.observe(rng.normal(1.0, 0.03, 16))
+    assert reports == []
+
+
+def test_straggler_transient_blip_not_flagged():
+    det = StragglerDetector(8, StragglerConfig(sustain=6))
+    rng = np.random.default_rng(2)
+    reports = []
+    for step in range(40):
+        t = rng.normal(1.0, 0.02, 8)
+        if step in (15, 16):            # 2-step GC pause, not sustained
+            t[3] *= 1.5
+        reports += det.observe(t)
+    assert reports == []
+
+
+@given(degrade=st.floats(1.2, 3.0))
+@settings(max_examples=20, deadline=None)
+def test_job_slowdown_tracks_worst_node(degrade):
+    det = StragglerDetector(8)
+    for _ in range(20):
+        t = np.ones(8)
+        t[0] = degrade
+        det.observe(t)
+    assert det.job_slowdown() == pytest.approx(degrade, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# elastic allocation
+# ---------------------------------------------------------------------------
+
+def test_elastic_allocation_degrades_width():
+    sched = GangScheduler(n_nodes=63)
+    for i in range(6):                   # 6 nodes down -> 57 free < 60
+        sched.mark_down(i, 0.0, "x")
+    s = Session(task_name="t", n_nodes=60)
+    assert not sched.try_allocate(s, 0.0)          # strict gang fails
+    s2 = Session(task_name="t", n_nodes=60)
+    assert sched.try_allocate_elastic(s2, 0.0, min_nodes=48)
+    assert len(s2.nodes) == 57                     # got everything available
+    assert s2.n_nodes == 57
+
+
+def test_elastic_respects_minimum():
+    sched = GangScheduler(n_nodes=10)
+    for i in range(8):
+        sched.mark_down(i, 0.0, "x")
+    s = Session(task_name="t", n_nodes=8)
+    assert not sched.try_allocate_elastic(s, 0.0, min_nodes=4)
+    assert s.nodes == []
