@@ -303,7 +303,71 @@ def bench_data_pipeline() -> list:
              "4 ranks x sequential own-shard reads (the §3.5 fix layout)")]
 
 
+# ---------------------------------------------------------------------------
+# engine speedup: event-driven vs serial 30 s-tick loop
+# ---------------------------------------------------------------------------
+
+def bench_cluster_engine() -> list:
+    import dataclasses
+
+    from repro.core.cluster import CampaignConfig, ClusterSim
+
+    # warm both paths (imports, allocator) before timing
+    ClusterSim(CampaignConfig(duration_h=24.0, seed=9)).run()
+    ClusterSim(CampaignConfig(duration_h=24.0, seed=9, engine="tick")).run()
+
+    # 73-day paper campaign, no telemetry (the sweep configuration)
+    cfg = CampaignConfig(seed=0)
+    ev, us_ev = timed(lambda: ClusterSim(cfg).run(),
+                      repeats=3 if FAST else 5)
+    tk, us_tk = timed(lambda: ClusterSim(
+        dataclasses.replace(cfg, engine="tick")).run(), repeats=1)
+    rows = [("cluster_engine_73d", us_ev,
+             f"event={us_ev/1e6:.3f}s tick={us_tk/1e6:.3f}s "
+             f"speedup=x{us_tk/us_ev:.1f} "
+             f"(sessions {len(ev.sessions)} vs {len(tk.sessions)}, "
+             f"occ {ev.training_occupancy():.3f} vs "
+             f"{tk.training_occupancy():.3f})")]
+
+    # telemetry-on window: batched span generation vs per-tick scrapes
+    days = 0.5 if FAST else 2.0
+    tcfg = CampaignConfig(duration_h=days * 24.0, telemetry=True, seed=11)
+    _, us_ev2 = timed(lambda: ClusterSim(tcfg).run())
+    _, us_tk2 = timed(lambda: ClusterSim(
+        dataclasses.replace(tcfg, engine="tick")).run())
+    rows.append(("cluster_engine_telemetry", us_ev2,
+                 f"{days:.1f}d window: event={us_ev2/1e6:.2f}s "
+                 f"tick={us_tk2/1e6:.2f}s speedup=x{us_tk2/us_ev2:.1f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# scenario sweep throughput (the ops/ front door)
+# ---------------------------------------------------------------------------
+
+def bench_scenario_sweep() -> list:
+    from repro.ops import SweepRunner, get_scenario
+
+    names = ("paper-faithful", "no-auto-retry", "smart-retry") if FAST \
+        else ("paper-faithful", "flaky-fabric", "no-auto-retry",
+              "smart-retry", "young-daly")
+    days = 14.0 if FAST else 73.0
+    seeds = (0, 1) if FAST else (0, 1, 2)
+    scenarios = [get_scenario(n).replace(duration_days=days) for n in names]
+    res, us = timed(lambda: SweepRunner(scenarios, seeds=seeds,
+                                        executor="process").run())
+    agg = res.aggregate()
+    succ = " ".join(
+        f"{n}={agg[n]['f4_success_rate']*100:.0f}%" for n in names)
+    n_camp = len(res.outcomes)
+    return [("scenario_sweep", us,
+             f"{len(names)}sc x {len(seeds)}seeds x {days:.0f}d = {n_camp} "
+             f"campaigns in {us/1e6:.2f}s ({us/1e6/n_camp:.2f}s each); "
+             f"F4 success: {succ} (paper 33.3%)")]
+
+
 def all_benches():
     return [bench_taxonomy, bench_youngdaly, bench_rpc, bench_ckpt_path,
             bench_io_sharding, bench_data_pipeline, bench_exclusion,
-            bench_retry, bench_precursor]
+            bench_retry, bench_precursor, bench_cluster_engine,
+            bench_scenario_sweep]

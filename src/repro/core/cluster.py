@@ -1,9 +1,9 @@
 """End-to-end cluster campaign simulation.
 
-Drives a 63-node training campaign through: the gang scheduler, session
-lifecycle, failure injection, telemetry scraping, XID-classified recovery,
-auto-retry chains, node exclusion, and checkpoint timing — everything the
-paper's §4 measures, in one discrete-time loop (30 s ticks).
+Drives a training campaign through: the gang scheduler, session lifecycle,
+failure injection, telemetry scraping, XID-classified recovery, auto-retry
+chains, node exclusion, and checkpoint timing — everything the paper's §4
+measures.
 
 Failure semantics (paper §4.3):
 * transient failures (most XID hardware events with spares available, app
@@ -13,14 +13,26 @@ Failure semantics (paper §4.3):
   is what made 8/12 of the paper's chains fail and burned a 30-attempt
   chain (§4.3.5).
 
+Two engines share one campaign state machine (``_CampaignState``):
+
+* ``engine="event"`` (default) — discrete-event loop.  Time jumps straight
+  between state-changing events (failure arrivals, retry timers, PREPARING
+  completions, repairs); checkpoint ticks are accounted analytically and
+  telemetry for the constant-state span between events is generated in one
+  batched numpy call (`ExporterSuite.tick_batch`).  This is what makes
+  campaign sweeps cheap: a 73-day campaign is a few hundred events instead
+  of ~210k 30-second ticks.
+* ``engine="tick"`` — the original serial 30 s-tick loop, kept as the
+  reference for the speedup benchmark and engine-parity tests.
+
 Used by: benchmarks (taxonomy / precursor / retry / exclusion / downtime),
-the fault-tolerant training example, and the integration tests.
+the scenario sweep runner (`repro.ops`), the fault-tolerant training
+example, and the integration tests.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -30,10 +42,16 @@ from repro.core.failures import FailureEvent, FailureInjector
 from repro.core.retry import Attempt, Chain, RetryConfig, RetryEngine
 from repro.core.scheduler import GangScheduler
 from repro.core.session import Session, SessionState
-from repro.telemetry.exporters import ExporterSuite, NodeState
+from repro.core.xid import XID_TABLE
+from repro.telemetry.exporters import (ExporterSuite, N_PAD_METRICS,
+                                       NodeState, NodeStateBatch)
 from repro.telemetry.registry import SCRAPE_INTERVAL_S, TimeSeriesStore
 
 TICK_H = SCRAPE_INTERVAL_S / 3600.0
+
+# batched telemetry emission: cap span chunks so transient (T, n_nodes)
+# buffers stay modest even when the campaign runs uninterrupted for days
+_MAX_SPAN_TICKS = 2048
 
 
 @dataclass
@@ -59,7 +77,19 @@ class CampaignConfig:
     manual_response_h_night: float = 1.5
     repair_time_h: float = 12.0              # node repair turnaround
     slow_isolation_h: float = 400.0          # fail-slow deliberate isolation
+    p_pressure_readmit: float = 0.01         # per failed gang attempt: chance
+                                             #   the operator readmits an
+                                             #   isolated healthy node; at one
+                                             #   attempt per ~11 min this is a
+                                             #   mean ~18 h response (paper:
+                                             #   the license case took hours)
+    # failure-mix shaping (passed through to FailureInjector)
+    hot_fraction: float = 0.05
+    hot_weight: float = 0.55
+    kind_weights: Optional[Dict[str, float]] = None
     telemetry: bool = False
+    telemetry_pad_metrics: Optional[int] = None   # None -> full 275-metric pad
+    engine: str = "event"                    # "event" | "tick"
     seed: int = 0
 
 
@@ -85,255 +115,438 @@ class CampaignResult:
         return [c for c in self.chains if len(c.attempts) > 1]
 
 
+class _CampaignState:
+    """Mutable campaign state + transition rules shared by both engines."""
+
+    def __init__(self, cfg: CampaignConfig, rng: np.random.Generator):
+        self.cfg = cfg
+        self.rng = rng
+        self.sched = GangScheduler(cfg.n_nodes,
+                                   spares=cfg.n_nodes - cfg.job_nodes)
+        self.retry_engine = RetryEngine(cfg.retry)
+        self.exclusions = ExclusionTracker(cfg.n_nodes)
+
+        self.sessions: List[Session] = []
+        self.chains: List[Chain] = []
+        self.downtimes: List[dict] = []
+        self.lost_hours: List[float] = []
+        self.ckpt_events = 0
+        self.version = 0
+
+        self.isolated: Dict[int, str] = {}       # node -> reason
+        self.repair_until: Dict[int, float] = {}
+
+        self.chain = Chain(task_name=f"b200_v{self.version}")
+        self.chains.append(self.chain)
+        self.current: Optional[Session] = None
+        self.prepare_until = 0.0
+        self.prepare_fails = False               # structural: PREPARING fails
+        self.structural_until = -1.0             # root cause fixed then
+        self.pending_start: Optional[float] = 0.0  # next attempt start time
+        self.start_is_manual = True              # operator-initiated attempt
+        self.last_ckpt = 0.0
+        self.down_since: Optional[float] = None
+        self.down_is_auto = True
+        self.last_fail_hardware = False
+
+    # -- attempt lifecycle --------------------------------------------------
+
+    def start_attempt(self, t: float) -> bool:
+        cfg, rng = self.cfg, self.rng
+        s = Session(task_name=self.chain.task_name, n_nodes=cfg.job_nodes,
+                    created_h=t)
+        if not self.sched.try_allocate(s, t):
+            # gang unmet: operators readmit a deliberately-isolated node
+            # under pressure if it is healthy (paper: the license case took
+            # hours) — only fail-slow isolations qualify; hardware-down
+            # nodes stay out until repaired
+            cand = [i for i in self.isolated
+                    if self.sched.nodes[i].healthy]
+            if cand and rng.random() < cfg.p_pressure_readmit:
+                self.sched.readmit(cand[0], t)
+                self.isolated.pop(cand[0], None)
+                self.repair_until.pop(cand[0], None)
+            self.chain.attempts.append(
+                Attempt(start_h=t, end_h=t, failure_kind="alloc_fail"))
+            return False
+        s.transition(SessionState.PREPARING, t)
+        self.sessions.append(s)
+        self.chain.attempts.append(Attempt(start_h=t))
+        self.current = s
+        self.prepare_fails = t < self.structural_until
+        # residual transient issues can also kill the first retry or two
+        # (node not yet isolated, stale NCCL state) — paper's successful
+        # chains still averaged >1 retry
+        if not self.prepare_fails and len(self.chain.attempts) in (2, 3) \
+                and rng.random() < cfg.p_transient_retry_fail:
+            self.prepare_fails = True
+        warm = cfg.loading_cold_h if self.last_fail_hardware \
+            else cfg.loading_time_h
+        dur = (warm + rng.uniform(-0.08, 0.3)) \
+            if not self.prepare_fails else rng.uniform(0.05, 0.15)
+        self.prepare_until = t + dur
+        return True
+
+    def fail_session(self, t: float, kind: str, xid=None):
+        self.last_fail_hardware = kind == "unreachable" or (
+            xid is not None and XID_TABLE[xid].hardware)
+        att = self.chain.attempts[-1]
+        att.end_h = t
+        att.failure_kind = kind
+        att.xid = xid
+        self.current.transition(SessionState.ERROR, t, error=f"{kind}:{xid}")
+        self.sched.release(self.current, t)
+        self.exclusions.record_session(self.current.created_h, t,
+                                       self.current.nodes,
+                                       dict(self.isolated))
+        self.current = None
+        if self.down_since is None:
+            self.down_since = t
+
+    def schedule_next(self, t: float, xid=None, structural: bool = False):
+        """Decide auto-retry vs operator handoff after a failure."""
+        cfg, rng = self.cfg, self.rng
+        n_attempt = len(self.chain.attempts)
+        delay_min = self.retry_engine.next_delay_min(n_attempt, xid=xid)
+        # operators notice a repeatedly-failing chain via alerting and kill
+        # it before max_retries (except off-hours: the paper's 30-attempt
+        # chain ran overnight)
+        noticed = n_attempt >= 3 and rng.random() < (
+            (cfg.retry.delay_min / 60.0)
+            / max(cfg.operator_notice_mean_h, 1e-6) * 0.5)
+        if structural and cfg.retry.structural_stop:
+            noticed = True                   # gang unmet: retrying is futile
+        if cfg.retry.enabled and delay_min is not None \
+                and n_attempt < cfg.retry.max_retries and not noticed:
+            self.pending_start = t + delay_min / 60.0
+            self.start_is_manual = False
+        else:
+            # chain abandoned -> operator intervention
+            if n_attempt >= cfg.retry.max_retries:
+                self.chain.stopped_reason = "max retries"
+            self.version += 1
+            self.chain = Chain(task_name=f"b200_v{self.version}")
+            self.chains.append(self.chain)
+            self.pending_start = t + self.manual_delay(t)
+            self.start_is_manual = True
+            self.down_is_auto = False
+            # the operator fixes the root cause... usually
+            if rng.random() < cfg.p_manual_misfix:
+                self.structural_until = max(
+                    self.structural_until,
+                    self.pending_start + rng.exponential(
+                        cfg.structural_fix_mean_h / 2))
+            else:
+                self.structural_until = min(self.structural_until,
+                                            self.pending_start)
+
+    def manual_delay(self, t_h: float) -> float:
+        """Operator response latency: fast in working hours, slow at night
+        and on weekends (paper Fig 17's 0-53 h manual tail)."""
+        cfg = self.cfg
+        hour_of_day = (t_h % 24.0)
+        day = int(t_h // 24.0) % 7
+        if day >= 5 or hour_of_day < 8 or hour_of_day > 20:
+            return float(self.rng.exponential(cfg.manual_response_h_night))
+        return float(self.rng.exponential(cfg.manual_response_h_day))
+
+    # -- shared per-time-step handlers --------------------------------------
+
+    def process_repairs(self, t: float):
+        for node, until in list(self.repair_until.items()):
+            if t >= until:
+                self.sched.readmit(node, t)
+                del self.repair_until[node]
+                self.isolated.pop(node, None)
+
+    def process_pending_start(self, t: float):
+        if self.current is None and self.pending_start is not None \
+                and t >= self.pending_start:
+            if self.start_attempt(t):
+                self.pending_start = None
+            else:
+                self.schedule_next(t, structural=True)
+
+    def process_prepare_done(self, t: float):
+        if self.current is not None \
+                and self.current.state is SessionState.PREPARING \
+                and t >= self.prepare_until:
+            if self.prepare_fails:          # structural failure at NCCL init
+                self.fail_session(t, "software")
+                self.schedule_next(t)
+            else:
+                self.current.transition(SessionState.RUNNING, t)
+                self.chain.attempts[-1].reached_training = True
+                self.last_ckpt = t
+                if self.down_since is not None:
+                    self.downtimes.append({"t": t,
+                                           "hours": t - self.down_since,
+                                           "auto": self.down_is_auto})
+                    self.down_since = None
+                    self.down_is_auto = True
+
+    def account_checkpoints(self, t: float):
+        """Catch up checkpoint bookkeeping for a RUNNING span ending at
+        ``t`` (analytic replacement for the per-tick interval check)."""
+        cfg = self.cfg
+        if self.current is None \
+                or self.current.state is not SessionState.RUNNING:
+            return
+        k = int(np.floor((t - self.last_ckpt + 1e-12)
+                         / cfg.checkpoint_interval_h))
+        if k > 0:
+            self.ckpt_events += k
+            self.current.checkpoint_step += k
+            self.last_ckpt += k * cfg.checkpoint_interval_h
+
+    def process_failure(self, t: float, ev: FailureEvent):
+        cfg, rng = self.cfg, self.rng
+        if ev.kind == "fail_slow":
+            self.isolated[ev.node] = "performance degradation"
+            self.sched.exclude(ev.node, t, "fail-slow (deliberate isolation)")
+            self.repair_until[ev.node] = t + cfg.slow_isolation_h
+            return
+        if ev.is_hardware:
+            self.sched.mark_down(ev.node, t, f"xid={ev.xid}"
+                                 if ev.xid else "unreachable")
+            self.repair_until[ev.node] = t + cfg.repair_time_h
+            self.isolated[ev.node] = "hardware failure"
+        if self.current is not None and not self.current.is_terminal \
+                and ev.node in self.current.nodes:
+            if self.current.state is SessionState.RUNNING:
+                self.lost_hours.append(min(t - self.last_ckpt,
+                                           cfg.checkpoint_interval_h))
+            # software-level follow-on? (NCCL wedged after the event)
+            if rng.random() < cfg.p_software_failure:
+                self.structural_until = max(
+                    self.structural_until,
+                    t + rng.exponential(cfg.structural_fix_mean_h))
+            self.fail_session(t, ev.kind, xid=ev.xid)
+            self.schedule_next(t, xid=ev.xid)
+
+    def finalize(self, failures, store) -> CampaignResult:
+        cfg = self.cfg
+        if self.current is not None and not self.current.is_terminal:
+            self.exclusions.record_session(self.current.created_h,
+                                           cfg.duration_h,
+                                           self.current.nodes,
+                                           dict(self.isolated))
+            self.current.transition(SessionState.TERMINATING, cfg.duration_h)
+            self.current.transition(SessionState.TERMINATED, cfg.duration_h)
+        return CampaignResult(
+            sessions=self.sessions, chains=self.chains, failures=failures,
+            exclusions=self.exclusions, store=store,
+            downtimes=self.downtimes, checkpoint_events=self.ckpt_events,
+            lost_hours=self.lost_hours, duration_h=cfg.duration_h)
+
+
+class _TelemetryBatcher:
+    """Emits scrape snapshots for constant-state spans between events.
+
+    Keeps an integer cursor over the global 30 s scrape grid; ``emit``
+    generates every tick in [span start, span end) with one batched
+    exporter call per <=``_MAX_SPAN_TICKS`` chunk.  Failure signatures are
+    pinned to the first grid tick at/after the event time (matching the
+    serial loop, which applied them on the tick that processed the event).
+    """
+
+    def __init__(self, cfg: CampaignConfig, exporters: ExporterSuite,
+                 store: TimeSeriesStore):
+        self.cfg = cfg
+        self.exporters = exporters
+        self.store = store
+        self.n_ticks_total = int(np.ceil(cfg.duration_h / TICK_H - 1e-9))
+        self.next_k = 0                       # next un-emitted grid tick
+        self.pending_sigs: List[Tuple[int, FailureEvent]] = []
+
+    def add_failure_signature(self, ev: FailureEvent):
+        k = int(np.ceil(ev.time_h / TICK_H - 1e-9))
+        if k < self.n_ticks_total:
+            self.pending_sigs.append((k, ev))
+
+    def emit(self, t_end: float, state: _CampaignState):
+        """Emit all grid ticks with time < ``t_end`` (campaign state is
+        constant over the span except checkpoint-save flags)."""
+        cfg = self.cfg
+        k_end = min(int(np.ceil(t_end / TICK_H - 1e-9)), self.n_ticks_total)
+        if k_end <= self.next_k:
+            return
+        n = cfg.n_nodes
+        down_row = np.array([not nd.healthy for nd in state.sched.nodes],
+                            dtype=float)
+        training_row = np.zeros(n)
+        loading_row = np.zeros(n)
+        running = False
+        cur = state.current
+        if cur is not None:
+            if cur.state is SessionState.RUNNING:
+                training_row[cur.nodes] = 1.0
+                running = True
+            elif cur.state is SessionState.PREPARING:
+                loading_row[cur.nodes] = 1.0
+
+        while self.next_k < k_end:
+            k0 = self.next_k
+            k1 = min(k0 + _MAX_SPAN_TICKS, k_end)
+            ts = np.arange(k0, k1) * TICK_H
+            T = len(ts)
+            if running:
+                # time since the most recent checkpoint at each tick
+                phase = np.mod(ts - state.last_ckpt,
+                               cfg.checkpoint_interval_h)
+                ckpt_mask = (phase < cfg.checkpoint_save_s / 3600.0)
+                ckpt = ckpt_mask[:, None] * training_row[None, :]
+            else:
+                ckpt = None
+            batch = NodeStateBatch.constant(
+                T, n, training=training_row, loading=loading_row,
+                checkpointing=ckpt, down=down_row)
+            rows = [(k - k0, ev) for k, ev in self.pending_sigs
+                    if k0 <= k < k1]
+            self.pending_sigs = [(k, ev) for k, ev in self.pending_sigs
+                                 if k >= k1]
+            snap = self.exporters.tick_batch(ts, batch, rows)
+            self.store.append_batch(ts, snap)
+            self.next_k = k1
+
+
 class ClusterSim:
     def __init__(self, config: CampaignConfig = CampaignConfig()):
         self.cfg = config
         self.rng = np.random.default_rng(config.seed)
 
-    # ------------------------------------------------------------------
+    def _make_injector(self) -> FailureInjector:
+        cfg = self.cfg
+        return FailureInjector(n_nodes=cfg.n_nodes, mtbf_h=cfg.mtbf_h,
+                               hot_fraction=cfg.hot_fraction,
+                               hot_weight=cfg.hot_weight,
+                               kind_weights=cfg.kind_weights,
+                               seed=cfg.seed)
+
+    def _make_telemetry(self, failures):
+        cfg = self.cfg
+        if not cfg.telemetry:
+            return None, None
+        n_pad = N_PAD_METRICS if cfg.telemetry_pad_metrics is None \
+            else cfg.telemetry_pad_metrics
+        exporters = ExporterSuite(cfg.n_nodes, seed=cfg.seed, n_pad=n_pad)
+        store = TimeSeriesStore(cfg.n_nodes)
+        for ev in failures:
+            if ev.precursor_lead_h > 0:
+                exporters.begin_gradual_precursor(
+                    ev.node, ev.time_h - ev.precursor_lead_h,
+                    until_h=ev.time_h + 0.05)
+        return exporters, store
 
     def run(self) -> CampaignResult:
+        if self.cfg.engine == "tick":
+            return self._run_tick()
+        if self.cfg.engine == "event":
+            return self._run_event()
+        raise ValueError(f"unknown engine {self.cfg.engine!r}")
+
+    # ------------------------------------------------------------------
+    # event-driven engine (default)
+    # ------------------------------------------------------------------
+
+    def _run_event(self) -> CampaignResult:
         cfg = self.cfg
-        rng = self.rng
-        sched = GangScheduler(cfg.n_nodes, spares=cfg.n_nodes - cfg.job_nodes)
-        injector = FailureInjector(n_nodes=cfg.n_nodes, mtbf_h=cfg.mtbf_h,
-                                   seed=cfg.seed)
-        failures = injector.sample(cfg.duration_h)
+        st = _CampaignState(cfg, self.rng)
+        failures = self._make_injector().sample(cfg.duration_h)
+        fail_idx = 0
+        exporters, store = self._make_telemetry(failures)
+        tel = _TelemetryBatcher(cfg, exporters, store) if exporters else None
+
+        t = 0.0
+        while True:
+            # ---- process everything due at t (same order as the serial
+            # loop: repairs, pending start, session progress, failures) ----
+            st.process_repairs(t)
+            st.process_pending_start(t)
+            st.process_prepare_done(t)
+            while fail_idx < len(failures) \
+                    and failures[fail_idx].time_h <= t + 1e-12:
+                ev = failures[fail_idx]
+                fail_idx += 1
+                if tel is not None:
+                    tel.add_failure_signature(ev)
+                st.process_failure(t, ev)
+
+            # ---- next event time ----
+            cands = [cfg.duration_h]
+            if st.repair_until:
+                cands.append(min(st.repair_until.values()))
+            if st.current is None and st.pending_start is not None:
+                cands.append(st.pending_start)
+            if st.current is not None \
+                    and st.current.state is SessionState.PREPARING:
+                cands.append(st.prepare_until)
+            if fail_idx < len(failures):
+                cands.append(failures[fail_idx].time_h)
+            t_next = min(c for c in cands if c > t + 1e-12) \
+                if any(c > t + 1e-12 for c in cands) else cfg.duration_h
+            t_next = min(t_next, cfg.duration_h)
+
+            # ---- emit the constant-state telemetry span, then catch up
+            # checkpoint bookkeeping to the span end ----
+            if tel is not None:
+                tel.emit(t_next, st)
+            st.account_checkpoints(t_next)
+            if t_next >= cfg.duration_h:
+                break
+            t = t_next
+
+        return st.finalize(failures, store)
+
+    # ------------------------------------------------------------------
+    # serial 30 s-tick engine (legacy reference)
+    # ------------------------------------------------------------------
+
+    def _run_tick(self) -> CampaignResult:
+        cfg = self.cfg
+        st = _CampaignState(cfg, self.rng)
+        failures = self._make_injector().sample(cfg.duration_h)
         fail_iter = iter(failures)
         next_fail = next(fail_iter, None)
-
-        exporters = ExporterSuite(cfg.n_nodes, seed=cfg.seed) \
-            if cfg.telemetry else None
-        store = TimeSeriesStore(cfg.n_nodes) if cfg.telemetry else None
-        retry_engine = RetryEngine(cfg.retry)
-        exclusions = ExclusionTracker(cfg.n_nodes)
-
-        sessions: List[Session] = []
-        chains: List[Chain] = []
-        downtimes: List[dict] = []
-        lost_hours: List[float] = []
-        ckpt_events = 0
-        version = 0
-
-        if exporters:
-            for ev in failures:
-                if ev.precursor_lead_h > 0:
-                    exporters.begin_gradual_precursor(
-                        ev.node, ev.time_h - ev.precursor_lead_h,
-                        until_h=ev.time_h + 0.05)
-
-        isolated: Dict[int, str] = {}          # node -> reason
-        repair_until: Dict[int, float] = {}
-
-        # campaign state
-        chain = Chain(task_name=f"b200_v{version}")
-        chains.append(chain)
-        current: Optional[Session] = None
-        prepare_until = 0.0
-        prepare_fails = False                  # structural: PREPARING will fail
-        structural_until = -1.0                # root cause fixed at this time
-        pending_start: Optional[float] = 0.0   # next attempt start time
-        start_is_manual = True                 # operator-initiated attempt
-        last_ckpt = 0.0
-        down_since: Optional[float] = None
-        down_is_auto = True
-        last_fail_hardware = False
-
-        def start_attempt(t: float) -> bool:
-            nonlocal current, prepare_until, prepare_fails
-            s = Session(task_name=chain.task_name, n_nodes=cfg.job_nodes,
-                        created_h=t)
-            if not sched.try_allocate(s, t):
-                # gang unmet: operators readmit an isolated node under
-                # pressure if one is healthy (paper: license case took hours)
-                cand = [i for i, r in isolated.items()
-                        if sched.nodes[i].healthy and i not in repair_until]
-                if cand and rng.random() < 0.5:
-                    sched.readmit(cand[0], t)
-                    isolated.pop(cand[0], None)
-                chain.attempts.append(
-                    Attempt(start_h=t, end_h=t, failure_kind="alloc_fail"))
-                return False
-            s.transition(SessionState.PREPARING, t)
-            sessions.append(s)
-            chain.attempts.append(Attempt(start_h=t))
-            current = s
-            prepare_fails = t < structural_until
-            # residual transient issues can also kill the first retry or two
-            # (node not yet isolated, stale NCCL state) — paper's successful
-            # chains still averaged >1 retry
-            if not prepare_fails and len(chain.attempts) in (2, 3) \
-                    and rng.random() < cfg.p_transient_retry_fail:
-                prepare_fails = True
-            warm = cfg.loading_cold_h if last_fail_hardware \
-                else cfg.loading_time_h
-            dur = (warm + rng.uniform(-0.08, 0.3)) \
-                if not prepare_fails else rng.uniform(0.05, 0.15)
-            prepare_until = t + dur
-            return True
-
-        def fail_session(t: float, kind: str, xid=None):
-            nonlocal current, down_since, last_fail_hardware
-            from repro.core.xid import XID_TABLE
-            last_fail_hardware = kind == "unreachable" or (
-                xid is not None and XID_TABLE[xid].hardware)
-            att = chain.attempts[-1]
-            att.end_h = t
-            att.failure_kind = kind
-            att.xid = xid
-            current.transition(SessionState.ERROR, t, error=f"{kind}:{xid}")
-            sched.release(current, t)
-            exclusions.record_session(current.created_h, t, current.nodes,
-                                      dict(isolated))
-            current = None
-            if down_since is None:
-                down_since = t
-
-        def schedule_next(t: float, xid=None):
-            """Decide auto-retry vs operator handoff after a failure."""
-            nonlocal pending_start, start_is_manual, chain, version, \
-                structural_until, down_is_auto
-            n_attempt = len(chain.attempts)
-            delay_min = retry_engine.next_delay_min(n_attempt, xid=xid)
-            # operators notice a repeatedly-failing chain via alerting and
-            # kill it before max_retries (except off-hours: the paper's
-            # 30-attempt chain ran overnight)
-            noticed = n_attempt >= 3 and rng.random() < (
-                TICK_H * 0 + (cfg.retry.delay_min / 60.0)
-                / max(cfg.operator_notice_mean_h, 1e-6) * 0.5)
-            if cfg.retry.enabled and delay_min is not None \
-                    and n_attempt < cfg.retry.max_retries and not noticed:
-                pending_start = t + delay_min / 60.0
-                start_is_manual = False
-            else:
-                # chain abandoned -> operator intervention
-                if n_attempt >= cfg.retry.max_retries:
-                    chain.stopped_reason = "max retries"
-                version += 1
-                chain = Chain(task_name=f"b200_v{version}")
-                chains.append(chain)
-                pending_start = t + self._manual_delay(t)
-                start_is_manual = True
-                down_is_auto = False
-                # the operator fixes the root cause... usually
-                if rng.random() < cfg.p_manual_misfix:
-                    structural_until = max(
-                        structural_until,
-                        pending_start + rng.exponential(
-                            cfg.structural_fix_mean_h / 2))
-                else:
-                    structural_until = min(structural_until, pending_start)
+        exporters, store = self._make_telemetry(failures)
 
         t = 0.0
         while t < cfg.duration_h:
-            # ---- repairs ----
-            for node, until in list(repair_until.items()):
-                if t >= until:
-                    sched.readmit(node, t)
-                    del repair_until[node]
-                    isolated.pop(node, None)
+            st.process_repairs(t)
+            st.process_pending_start(t)
+            st.process_prepare_done(t)
+            if st.current is not None \
+                    and st.current.state is SessionState.RUNNING \
+                    and t - st.last_ckpt >= cfg.checkpoint_interval_h:
+                st.ckpt_events += 1
+                st.last_ckpt = t
+                st.current.checkpoint_step += 1
 
-            # ---- start pending attempt ----
-            if current is None and pending_start is not None \
-                    and t >= pending_start:
-                if start_attempt(t):
-                    pending_start = None
-                else:
-                    schedule_next(t)
-
-            # ---- session progress ----
-            if current is not None:
-                if current.state is SessionState.PREPARING \
-                        and t >= prepare_until:
-                    if prepare_fails:       # structural failure at NCCL init
-                        fail_session(t, "software")
-                        schedule_next(t)
-                    else:
-                        current.transition(SessionState.RUNNING, t)
-                        chain.attempts[-1].reached_training = True
-                        last_ckpt = t
-                        if down_since is not None:
-                            downtimes.append({"t": t,
-                                              "hours": t - down_since,
-                                              "auto": down_is_auto})
-                            down_since = None
-                            down_is_auto = True
-                elif current.state is SessionState.RUNNING \
-                        and t - last_ckpt >= cfg.checkpoint_interval_h:
-                    ckpt_events += 1
-                    last_ckpt = t
-                    current.checkpoint_step += 1
-
-            # ---- failures ----
             fired: List[FailureEvent] = []
             while next_fail is not None and next_fail.time_h <= t:
                 fired.append(next_fail)
                 next_fail = next(fail_iter, None)
             for ev in fired:
-                if ev.kind == "fail_slow":
-                    isolated[ev.node] = "performance degradation"
-                    sched.exclude(ev.node, t,
-                                  "fail-slow (deliberate isolation)")
-                    repair_until[ev.node] = t + cfg.slow_isolation_h
-                    continue
-                if ev.is_hardware:
-                    sched.mark_down(ev.node, t, f"xid={ev.xid}"
-                                    if ev.xid else "unreachable")
-                    repair_until[ev.node] = t + cfg.repair_time_h
-                    isolated[ev.node] = "hardware failure"
-                if current is not None and not current.is_terminal \
-                        and ev.node in current.nodes:
-                    if current.state is SessionState.RUNNING:
-                        lost_hours.append(min(t - last_ckpt,
-                                              cfg.checkpoint_interval_h))
-                    # software-level follow-on? (NCCL wedged after the event)
-                    if rng.random() < cfg.p_software_failure:
-                        structural_until = max(
-                            structural_until,
-                            t + rng.exponential(cfg.structural_fix_mean_h))
-                    fail_session(t, ev.kind, xid=ev.xid)
-                    schedule_next(t, xid=ev.xid)
+                st.process_failure(t, ev)
 
-            # ---- telemetry scrape ----
             if exporters is not None:
+                cur = st.current
                 states = []
                 for i in range(cfg.n_nodes):
-                    in_job = current is not None and i in current.nodes \
-                        and current.state is SessionState.RUNNING
-                    loading = current is not None and i in current.nodes \
-                        and current.state is SessionState.PREPARING
-                    st = NodeState(
+                    in_job = cur is not None and i in cur.nodes \
+                        and cur.state is SessionState.RUNNING
+                    loading = cur is not None and i in cur.nodes \
+                        and cur.state is SessionState.PREPARING
+                    states.append(NodeState(
                         training=in_job,
                         checkpointing=in_job and
-                        (t - last_ckpt) < cfg.checkpoint_save_s / 3600.0,
+                        (t - st.last_ckpt) < cfg.checkpoint_save_s / 3600.0,
                         loading=loading,
-                        down=not sched.nodes[i].healthy,
-                    )
-                    states.append(st)
+                        down=not st.sched.nodes[i].healthy,
+                    ))
                 snap = exporters.tick(t, states, fired)
                 store.append(t, snap)
 
             t += TICK_H
 
-        if current is not None and not current.is_terminal:
-            exclusions.record_session(current.created_h, cfg.duration_h,
-                                      current.nodes, dict(isolated))
-            current.transition(SessionState.TERMINATING, cfg.duration_h)
-            current.transition(SessionState.TERMINATED, cfg.duration_h)
-
-        return CampaignResult(
-            sessions=sessions, chains=chains, failures=failures,
-            exclusions=exclusions, store=store, downtimes=downtimes,
-            checkpoint_events=ckpt_events, lost_hours=lost_hours,
-            duration_h=cfg.duration_h)
-
-    # ------------------------------------------------------------------
-
-    def _manual_delay(self, t_h: float) -> float:
-        """Operator response latency: fast in working hours, slow at night
-        and on weekends (paper Fig 17's 0-53 h manual tail)."""
-        hour_of_day = (t_h % 24.0)
-        day = int(t_h // 24.0) % 7
-        if day >= 5 or hour_of_day < 8 or hour_of_day > 20:
-            return float(self.rng.exponential(self.cfg.manual_response_h_night))
-        return float(self.rng.exponential(self.cfg.manual_response_h_day))
+        return st.finalize(failures, store)

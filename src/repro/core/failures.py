@@ -28,6 +28,17 @@ P_FAIL_SLOW = 0.233                 # "Others": perf degradation etc.
 
 MTBF_HOURS = 56.2                   # paper Table 11
 
+# scenario-facing failure categories (ops/scenario.py tilts these weights)
+CATEGORY_OF_XID = {
+    145: "nvlink", 149: "nvlink",
+    94: "ecc",
+    79: "dropout",
+    119: "exec",
+    31: "app", 43: "app",
+}
+FAILURE_CATEGORIES = frozenset(CATEGORY_OF_XID.values()) \
+    | {"unreachable", "fail_slow"}
+
 
 @dataclass
 class FailureEvent:
@@ -60,6 +71,10 @@ class FailureInjector:
     hot_weight: float = 0.55
     pre_xid_fraction: float = 0.2   # paper: 2/10 failures had precursors
     seed: int = 0
+    # multiplicative tilts on the paper mix, keyed by category
+    # ("nvlink" | "ecc" | "dropout" | "exec" | "app" | "unreachable" |
+    #  "fail_slow"); the mix is renormalised after tilting
+    kind_weights: Optional[Dict[str, float]] = None
 
     def node_hazard(self) -> np.ndarray:
         rng = np.random.default_rng(self.seed + 1)
@@ -70,39 +85,52 @@ class FailureInjector:
         return w
 
     def sample(self, duration_h: float) -> List[FailureEvent]:
+        """Vectorized schedule draw: exponential inter-failure gaps, skewed
+        node choice, and mix assignment all in block numpy operations."""
         rng = np.random.default_rng(self.seed)
         hazard = self.node_hazard()
-        events: List[FailureEvent] = []
-        t = 0.0
         kinds, probs = self._mix()
-        while True:
-            t += rng.exponential(self.mtbf_h)
-            if t >= duration_h:
-                break
-            node = int(rng.choice(self.n_nodes, p=hazard))
-            kind_idx = rng.choice(len(kinds), p=probs)
-            kind, xid = kinds[kind_idx]
-            lead = 0.0
-            slow = 1.0
-            if kind == "xid" and rng.random() < self.pre_xid_fraction:
-                lead = float(rng.uniform(0.25, 2.0))   # gradual degradation
-            if kind == "fail_slow":
-                slow = float(rng.uniform(1.15, 1.6))   # 15-60% step-time hit
-            events.append(FailureEvent(time_h=float(t), node=node, kind=kind,
-                                       xid=xid, precursor_lead_h=lead,
-                                       slow_factor=slow))
-        return events
 
-    @staticmethod
-    def _mix():
+        # draw gap blocks until the cumulative time passes the horizon
+        times = np.empty(0)
+        block = max(int(duration_h / self.mtbf_h * 1.5) + 8, 16)
+        total = 0.0
+        while total < duration_h:
+            gaps = rng.exponential(self.mtbf_h, block)
+            times = np.concatenate([times, total + np.cumsum(gaps)])
+            total = float(times[-1])
+        times = times[times < duration_h]
+        k = len(times)
+        if k == 0:
+            return []
+
+        nodes = rng.choice(self.n_nodes, size=k, p=hazard)
+        kind_idx = rng.choice(len(kinds), size=k, p=probs)
+        is_xid = np.array([kinds[i][0] == "xid" for i in kind_idx])
+        is_slow = np.array([kinds[i][0] == "fail_slow" for i in kind_idx])
+        leads = np.where(is_xid & (rng.random(k) < self.pre_xid_fraction),
+                         rng.uniform(0.25, 2.0, k),   # gradual degradation
+                         0.0)
+        slows = np.where(is_slow,
+                         rng.uniform(1.15, 1.6, k),   # 15-60% step-time hit
+                         1.0)
+        return [FailureEvent(time_h=float(times[i]), node=int(nodes[i]),
+                             kind=kinds[kind_idx[i]][0],
+                             xid=kinds[kind_idx[i]][1],
+                             precursor_lead_h=float(leads[i]),
+                             slow_factor=float(slows[i]))
+                for i in range(k)]
+
+    def _mix(self):
         kinds = []
         probs = []
+        w = self.kind_weights or {}
         for xid, p in XID_MIX:
             kinds.append(("xid", xid))
-            probs.append(p)
+            probs.append(p * w.get(CATEGORY_OF_XID[xid], 1.0))
         kinds.append(("unreachable", None))
-        probs.append(P_MACHINE_UNREACHABLE)
+        probs.append(P_MACHINE_UNREACHABLE * w.get("unreachable", 1.0))
         kinds.append(("fail_slow", None))
-        probs.append(P_FAIL_SLOW)
+        probs.append(P_FAIL_SLOW * w.get("fail_slow", 1.0))
         probs = np.asarray(probs)
         return kinds, probs / probs.sum()

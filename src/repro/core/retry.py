@@ -38,6 +38,10 @@ class RetryConfig:
     backoff_factor: float = 2.0
     backoff_cap_min: float = 80.0
     gpu_reset_min: float = 6.0       # device reset before retry (XID branch)
+    # §4.3.5 improvement 3: when the healthy pool cannot satisfy the gang
+    # requirement, hand off to the operator immediately instead of burning
+    # attempts (the paper's chains lacked this and burned 30 in a row)
+    structural_stop: bool = False
 
 
 @dataclass

@@ -1,0 +1,16 @@
+"""Operational scenario engine: declarative campaign specs + batched sweeps.
+
+``Scenario`` composes a failure mix, a retry policy, a checkpoint strategy,
+and a storage model into a named, serializable campaign spec;
+``SweepRunner`` fans N seeds x M scenarios out over worker processes and
+aggregates the paper's F1-F4 findings into comparison tables.
+"""
+from repro.ops.scenario import (PRESETS, Scenario, get_scenario,
+                                list_scenarios)
+from repro.ops.sweep import (SweepOutcome, SweepResult, SweepRunner,
+                             run_campaign)
+
+__all__ = [
+    "Scenario", "PRESETS", "get_scenario", "list_scenarios",
+    "SweepRunner", "SweepResult", "SweepOutcome", "run_campaign",
+]

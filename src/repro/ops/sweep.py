@@ -1,0 +1,272 @@
+"""Vectorized campaign sweeps: N seeds x M scenarios -> F1-F4 comparison.
+
+`SweepRunner` fans campaigns out over a `concurrent.futures` executor
+(process pool by default — each campaign is an independent, seeded
+simulation), computes the paper's four findings per campaign, aggregates
+across seeds, and renders a markdown comparison report next to the paper's
+published numbers.
+
+The per-campaign worker is a module-level function (`run_campaign`) taking
+plain dicts, so specs pickle across process boundaries and results are
+deterministic for fixed (scenario, seed) regardless of executor choice.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.cluster import ClusterSim
+from repro.core.retry import chain_stats
+from repro.ops.scenario import Scenario, get_scenario
+
+# paper headline values, shown as the reference row of every report
+PAPER_REFERENCE = {
+    "occupancy": 0.966,            # §3 training occupancy
+    "f1_detection_rate": 1.0,      # 10/10 at-XID detection
+    "f1_pre_xid_rate": 0.2,        # 2/10 pre-XID
+    "f1_fp_per_day": 0.84,
+    "f3_top3_share": 0.50,         # >50% of exclusions on 3 nodes
+    "f4_success_rate": 0.333,      # auto-retry chain success
+    "f4_gap_median_min": 11.0,     # inter-session gap
+    "f4_auto_downtime_h": 1.9,
+    "f4_manual_downtime_h": 3.3,
+}
+
+
+# ---------------------------------------------------------------------------
+# per-campaign worker (module-level: must pickle for ProcessPoolExecutor)
+# ---------------------------------------------------------------------------
+
+def compute_findings(res) -> Dict[str, Optional[float]]:
+    """F2-F4 metrics (plus campaign health) from one CampaignResult."""
+    st = chain_stats(res.retry_chains())
+    excl = res.exclusions.summary()
+    autos = [d["hours"] for d in res.downtimes if d["auto"]]
+    mans = [d["hours"] for d in res.downtimes if not d["auto"]]
+    return {
+        "occupancy": res.training_occupancy(),
+        "n_failures": float(len(res.failures)),
+        "n_sessions": float(len(res.sessions)),
+        "ckpt_events": float(res.checkpoint_events),
+        "mean_lost_h": float(np.mean(res.lost_hours))
+        if res.lost_hours else 0.0,
+        "f3_top3_share": excl["top3_share"],
+        "f3_deliberate_fraction": excl["deliberate_fraction"],
+        "f4_n_chains": float(st["n_chains"]),
+        "f4_n_attempts": float(st["n_attempts"]),
+        "f4_success_rate": st["chain_success_rate"],
+        "f4_gap_median_min": st["gap_median_min"],
+        "f4_auto_downtime_h": float(np.median(autos)) if autos else None,
+        "f4_manual_downtime_h": float(np.median(mans)) if mans else None,
+    }
+
+
+def _f1_findings(scenario: Scenario, seed: int) -> Dict[str, float]:
+    """F1 precursor metrics from a telemetry-on sub-campaign.
+
+    Full-length telemetry at 30 s x ~300 metrics x n_nodes does not fit in
+    memory for 73-day sweeps, so F1 runs on a shorter window
+    (``scenario.telemetry_days``); detection and FP rates are per-day
+    quantities, so the window length only affects their variance.  The
+    full ~305-metric registry is scraped by default (~0.5 GB per 2-day
+    campaign, one campaign in flight per pool worker) — set
+    ``scenario.telemetry_pad_metrics`` to shrink it for wide sweeps, at
+    the cost of FP-rate fidelity.
+    """
+    from repro.core.precursor import (DetectorConfig, PrecursorDetector,
+                                      evaluate)
+    sub = scenario.replace(duration_days=scenario.telemetry_days,
+                           telemetry=True)
+    res = ClusterSim(sub.to_campaign_config(seed)).run()
+    xid_fails = [f for f in res.failures if f.kind == "xid"]
+    alarms = PrecursorDetector(DetectorConfig()).scan(res.store)
+    ev = evaluate(alarms, xid_fails, res.duration_h)
+    # windows with no XID event cannot score detection (None -> skipped in
+    # aggregation); the FP rate is meaningful either way
+    has_events = ev.n_failures > 0
+    return {
+        "f1_n_failures": float(ev.n_failures),
+        "f1_detection_rate": ev.detection_rate if has_events else None,
+        "f1_pre_xid_rate": ev.pre_xid_rate if has_events else None,
+        "f1_fp_per_day": ev.fp_per_day,
+    }
+
+
+def run_campaign(scenario_dict: dict, seed: int) -> dict:
+    """Run one (scenario, seed) campaign and return its findings dict."""
+    scenario = Scenario.from_dict(scenario_dict)
+    t0 = time.perf_counter()
+    res = ClusterSim(scenario.to_campaign_config(seed)).run()
+    findings = compute_findings(res)
+    if scenario.telemetry_days > 0:
+        findings.update(_f1_findings(scenario, seed))
+    findings["wall_s"] = time.perf_counter() - t0
+    return {"scenario": scenario.name, "seed": seed, "findings": findings}
+
+
+# ---------------------------------------------------------------------------
+# sweep runner
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SweepOutcome:
+    scenario: str
+    seed: int
+    findings: Dict[str, Optional[float]]
+
+
+@dataclass
+class SweepResult:
+    scenarios: List[Scenario]
+    seeds: List[int]
+    outcomes: List[SweepOutcome]
+    wall_s: float = 0.0
+
+    def aggregate(self) -> Dict[str, Dict[str, float]]:
+        """scenario -> metric -> mean over seeds (None values skipped)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for sc in self.scenarios:
+            per = [o.findings for o in self.outcomes if o.scenario == sc.name]
+            keys = sorted({k for f in per for k in f})
+            agg = {}
+            for k in keys:
+                vals = [f[k] for f in per if f.get(k) is not None]
+                agg[k] = float(np.mean(vals)) if vals else None
+            out[sc.name] = agg
+        return out
+
+    # -- rendering ----------------------------------------------------------
+
+    _COLUMNS = [
+        ("occupancy", "occ %", lambda v: f"{v*100:.1f}"),
+        ("n_failures", "fails", lambda v: f"{v:.0f}"),
+        ("f1_detection_rate", "F1 det %", lambda v: f"{v*100:.0f}"),
+        ("f1_fp_per_day", "F1 fp/d", lambda v: f"{v:.2f}"),
+        ("f3_top3_share", "F3 top3 %", lambda v: f"{v*100:.0f}"),
+        ("f4_n_chains", "F4 chains", lambda v: f"{v:.1f}"),
+        ("f4_success_rate", "F4 succ %", lambda v: f"{v*100:.0f}"),
+        ("f4_gap_median_min", "gap min", lambda v: f"{v:.0f}"),
+        ("f4_auto_downtime_h", "auto dt h", lambda v: f"{v:.1f}"),
+        ("f4_manual_downtime_h", "manual dt h", lambda v: f"{v:.1f}"),
+    ]
+
+    def comparison_rows(self) -> List[List[str]]:
+        agg = self.aggregate()
+        header = ["scenario"] + [label for _, label, _ in self._COLUMNS]
+        rows = [header]
+        for sc in self.scenarios:
+            row = [sc.name]
+            for key, _, fmt in self._COLUMNS:
+                v = agg[sc.name].get(key)
+                row.append(fmt(v) if v is not None else "—")
+            rows.append(row)
+        ref = ["paper"]
+        for key, _, fmt in self._COLUMNS:
+            v = PAPER_REFERENCE.get(key)
+            ref.append(fmt(v) if v is not None else "—")
+        rows.append(ref)
+        return rows
+
+    def comparison_table(self) -> str:
+        """Plain-text table (also valid GitHub markdown)."""
+        rows = self.comparison_rows()
+        widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+        def line(r):
+            return "| " + " | ".join(c.ljust(w) for c, w in zip(r, widths)) \
+                + " |"
+        sep = "|" + "|".join("-" * (w + 2) for w in widths) + "|"
+        return "\n".join([line(rows[0]), sep] + [line(r) for r in rows[1:]])
+
+    def to_markdown(self) -> str:
+        n_campaigns = len(self.outcomes)
+        parts = [
+            "# Scenario sweep report",
+            "",
+            f"{len(self.scenarios)} scenarios x {len(self.seeds)} seeds = "
+            f"{n_campaigns} campaigns, wall time {self.wall_s:.1f} s "
+            f"({self.wall_s / max(n_campaigns, 1):.2f} s/campaign).",
+            "",
+            "## F1-F4 comparison (mean over seeds)",
+            "",
+            self.comparison_table(),
+            "",
+            "`—` = not applicable (F1 columns need `telemetry_days > 0`; "
+            "downtime columns need at least one episode of that kind).",
+            "",
+            "## Scenarios",
+            "",
+        ]
+        for sc in self.scenarios:
+            parts.append(f"- **{sc.name}** ({sc.duration_days:.0f} d, "
+                         f"{sc.n_nodes} nodes): {sc.description}")
+        parts += [
+            "",
+            "## Paper reference",
+            "",
+            "F1: 10/10 detection, 2/10 pre-XID, 0.84 FP/day (Table 9). "
+            "F3: >50% of exclusions on 3 nodes (Figs 11-13). "
+            "F4: 33.3% auto-retry chain success vs 12.5% manual, 11 min "
+            "median gap, 1.9 h vs 3.3 h median downtime (Table 14, "
+            "Figs 16-17).",
+            "",
+        ]
+        return "\n".join(parts)
+
+    def write(self, path) -> str:
+        md = self.to_markdown()
+        with open(path, "w") as f:
+            f.write(md)
+        return md
+
+
+class SweepRunner:
+    """Runs M scenarios x N seeds and aggregates findings.
+
+    ``executor``: "process" (default — campaigns are CPU-bound pure Python/
+    numpy), "thread", or "serial" (in-process, deterministic ordering, used
+    by tests).
+    """
+
+    def __init__(self, scenarios: Sequence[Union[Scenario, str]],
+                 seeds: Iterable[int] = (0, 1, 2),
+                 max_workers: Optional[int] = None,
+                 executor: str = "process"):
+        self.scenarios = [get_scenario(s) if isinstance(s, str) else s
+                          for s in scenarios]
+        names = [s.name for s in self.scenarios]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate scenario names: {names}")
+        self.seeds = list(seeds)
+        self.max_workers = max_workers
+        if executor not in ("process", "thread", "serial"):
+            raise ValueError(f"unknown executor {executor!r}")
+        self.executor = executor
+
+    def run(self) -> SweepResult:
+        tasks = [(sc.to_dict(), seed)
+                 for sc in self.scenarios for seed in self.seeds]
+        t0 = time.perf_counter()
+        if self.executor == "serial":
+            raw = [run_campaign(d, s) for d, s in tasks]
+        else:
+            pool_cls = concurrent.futures.ProcessPoolExecutor \
+                if self.executor == "process" \
+                else concurrent.futures.ThreadPoolExecutor
+            workers = self.max_workers or min(len(tasks),
+                                              os.cpu_count() or 1)
+            with pool_cls(max_workers=workers) as pool:
+                futs = [pool.submit(run_campaign, d, s) for d, s in tasks]
+                raw = [f.result() for f in futs]
+        wall = time.perf_counter() - t0
+        order = {sc.name: i for i, sc in enumerate(self.scenarios)}
+        outcomes = sorted(
+            (SweepOutcome(r["scenario"], r["seed"], r["findings"])
+             for r in raw),
+            key=lambda o: (order[o.scenario], o.seed))
+        return SweepResult(scenarios=self.scenarios, seeds=self.seeds,
+                           outcomes=outcomes, wall_s=wall)

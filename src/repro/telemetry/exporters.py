@@ -12,11 +12,16 @@ that the failure injector drives:
 * Gradual precursors (the 2/10 pre-XID cases): accelerating correctable
   row-remaps and creeping temperature before the XID fires.
 * Fail-slow: GPU util dips + per-step time inflation without any XID.
+
+Generation is batched: ``tick_batch`` produces (n_ticks, n_nodes) arrays for
+a whole span of scrape ticks in one set of numpy draws, which is what makes
+the event-driven cluster simulation fast (the per-tick ``tick`` wrapper is
+kept for single-scrape callers and tests).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -26,7 +31,8 @@ from repro.telemetry.registry import MetricMeta, MetricRegistry
 # The full production pipeline carries ~751 metric names, ~305 analysis-
 # relevant (paper §3.4).  We model the ~30 the analyses actually read and
 # pad the registry with inert extras so detector cost/FP behaviour is
-# realistic at the true metric count.
+# realistic at the true metric count.  Sweeps that only need F3/F4 can
+# shrink the pad (``n_pad``) to bound the time-series store footprint.
 N_PAD_METRICS = 275
 
 CORE_METRICS = [
@@ -82,16 +88,58 @@ class NodeState:
     slow_factor: float = 1.0
 
 
-class ExporterSuite:
-    """Generates one scrape tick of all metrics for all nodes."""
+@dataclass
+class NodeStateBatch:
+    """Node activity over a span of scrape ticks, as (n_ticks, n_nodes)
+    arrays.  Within a span between discrete events the per-node role is
+    constant, so builders usually broadcast a single (n_nodes,) row."""
+    training: np.ndarray
+    checkpointing: np.ndarray
+    loading: np.ndarray
+    down: np.ndarray
+    slow: np.ndarray
 
-    def __init__(self, n_nodes: int, seed: int = 0):
+    @classmethod
+    def from_states(cls, states: Sequence[NodeState]) -> "NodeStateBatch":
+        """One tick (T=1) from a list of per-node states."""
+        def row(fn, dtype=float):
+            return np.array([[fn(s) for s in states]], dtype=dtype)
+        return cls(training=row(lambda s: s.training),
+                   checkpointing=row(lambda s: s.checkpointing),
+                   loading=row(lambda s: s.loading),
+                   down=row(lambda s: s.down),
+                   slow=row(lambda s: s.slow_factor))
+
+    @classmethod
+    def constant(cls, n_ticks: int, n_nodes: int, *,
+                 training=None, checkpointing=None, loading=None,
+                 down=None, slow=None) -> "NodeStateBatch":
+        """Broadcast per-node rows (or tick-varying arrays) to (T, n)."""
+        def expand(x, fill=0.0):
+            if x is None:
+                return np.full((n_ticks, n_nodes), fill)
+            x = np.asarray(x, dtype=float)
+            return np.broadcast_to(x, (n_ticks, n_nodes)).copy() \
+                if x.ndim < 2 else x.astype(float)
+        return cls(training=expand(training),
+                   checkpointing=expand(checkpointing),
+                   loading=expand(loading),
+                   down=expand(down),
+                   slow=expand(slow, fill=1.0))
+
+
+class ExporterSuite:
+    """Generates scrape ticks of all metrics for all nodes."""
+
+    def __init__(self, n_nodes: int, seed: int = 0,
+                 n_pad: int = N_PAD_METRICS):
         self.n = n_nodes
+        self.n_pad = n_pad
         self.rng = np.random.default_rng(seed)
         self.reg = MetricRegistry(n_nodes)
         for name, kind, exp in CORE_METRICS:
             self.reg.register(MetricMeta(name, kind, exp))
-        for i in range(N_PAD_METRICS):
+        for i in range(n_pad):
             self.reg.register(MetricMeta(f"aux_metric_{i:03d}", "gauge", "node"))
         # persistent per-node counters
         self.remap_corr = np.zeros(n_nodes)
@@ -104,124 +152,172 @@ class ExporterSuite:
                                 until_h: float = float("inf")):
         self.accel_nodes[node] = (t_h, until_h)
 
+    # -- single-tick compatibility wrapper ---------------------------------
+
     def tick(self, t_h: float, states: List[NodeState],
              failures_now: List[FailureEvent]) -> Dict[str, np.ndarray]:
         """Produce one 30-second scrape snapshot at time ``t_h`` (hours)."""
+        batch = NodeStateBatch.from_states(states)
+        out = self.tick_batch(np.array([t_h]), batch,
+                              [(0, ev) for ev in failures_now])
+        return {k: v[0] for k, v in out.items()}
+
+    # -- batched generation -------------------------------------------------
+
+    def tick_batch(self, ts: np.ndarray, batch: NodeStateBatch,
+                   failure_rows: Sequence[Tuple[int, FailureEvent]] = ()
+                   ) -> Dict[str, np.ndarray]:
+        """Produce ``len(ts)`` scrape snapshots at once.
+
+        ``ts``: (T,) scrape times in hours; ``batch``: (T, n) activity masks;
+        ``failure_rows``: (row_index, event) pairs pinning each failure's
+        abrupt signature to the scrape tick it lands on.  Returns
+        metric -> (T, n) arrays.  Persistent counters (row-remaps) advance
+        by cumulative sums so per-tick semantics match the serial loop.
+        """
         n = self.n
         r = self.rng
-        up = np.array([not s.down for s in states], dtype=float)
-        training = np.array([s.training and not s.down for s in states],
-                            dtype=float)
-        ckpt = np.array([s.checkpointing for s in states], dtype=float)
-        load = np.array([s.loading for s in states], dtype=float)
-        slow = np.array([s.slow_factor for s in states])
+        ts = np.asarray(ts, dtype=float)
+        T = len(ts)
+        up = 1.0 - np.asarray(batch.down, dtype=float)
+        training = np.asarray(batch.training, dtype=float) * up
+        ckpt = np.asarray(batch.checkpointing, dtype=float)
+        load = np.asarray(batch.loading, dtype=float)
+        slow = np.asarray(batch.slow, dtype=float)
+        shape = (T, n)
 
         v: Dict[str, np.ndarray] = {}
         # host interrupts: ~300K/30s while the GPUs generate work
         v["node_intr_total"] = (300e3 * training / slow + 40e3 * up
-                                + r.normal(0, 8e3, n)) * up
+                                + r.normal(0, 8e3, shape)) * up
         v["node_procs_running"] = (34 * training + 2 * up
-                                   + r.integers(0, 3, n)) * up
-        v["node_procs_blocked"] = (r.integers(0, 2, n) + 30 * ckpt) * up
-        v["node_vmstat_pgpgout"] = (2e4 + 3e6 * ckpt + r.normal(0, 5e3, n)) * up
-        v["node_vmstat_pgpgin"] = (2e4 + 5e6 * load + r.normal(0, 5e3, n)) * up
+                                   + r.integers(0, 3, shape)) * up
+        v["node_procs_blocked"] = (r.integers(0, 2, shape) + 30 * ckpt) * up
+        v["node_vmstat_pgpgout"] = (2e4 + 3e6 * ckpt
+                                    + r.normal(0, 5e3, shape)) * up
+        v["node_vmstat_pgpgin"] = (2e4 + 5e6 * load
+                                   + r.normal(0, 5e3, shape)) * up
         v["node_memory_MemAvailable_bytes"] = \
-            (1.9e12 - 1e11 * training + r.normal(0, 2e10, n)) * up
+            (1.9e12 - 1e11 * training + r.normal(0, 2e10, shape)) * up
         v["node_memory_Dirty_bytes"] = (1e8 + 2.4e10 * ckpt
-                                        + r.normal(0, 3e7, n)) * up
+                                        + r.normal(0, 3e7, shape)) * up
         v["node_memory_Writeback_bytes"] = (5e6 + 1.2e10 * ckpt
-                                            + r.normal(0, 1e6, n)) * up
+                                            + r.normal(0, 1e6, shape)) * up
         v["node_mountstats_nfs_operations_response_time_seconds_total:GETATTR"] = \
-            (0.05 + 0.4 * load + r.exponential(0.01, n)) * up
+            (0.05 + 0.4 * load + r.exponential(0.01, shape)) * up
         v["node_mountstats_nfs_operations_queue_time_seconds_total:WRITE"] = \
-            (0.01 + 45.0 * ckpt + r.exponential(0.005, n)) * up
+            (0.01 + 45.0 * ckpt + r.exponential(0.005, shape)) * up
         v["node_mountstats_nfs_read_bytes_total"] = \
-            (1e6 + 4.2e9 * 30 * load + r.normal(0, 1e5, n)).clip(0) * up
+            (1e6 + 4.2e9 * 30 * load + r.normal(0, 1e5, shape)).clip(0) * up
         v["node_mountstats_nfs_write_bytes_total"] = \
-            (1e5 + 0.6e9 * 30 * ckpt + r.normal(0, 1e4, n)).clip(0) * up
-        v["node_network_transmit_bytes_total"] = (2e8 + r.normal(0, 1e7, n)) * up
-        v["node_network_receive_bytes_total"] = (2e8 + r.normal(0, 1e7, n)) * up
+            (1e5 + 0.6e9 * 30 * ckpt + r.normal(0, 1e4, shape)).clip(0) * up
+        v["node_network_transmit_bytes_total"] = \
+            (2e8 + r.normal(0, 1e7, shape)) * up
+        v["node_network_receive_bytes_total"] = \
+            (2e8 + r.normal(0, 1e7, shape)) * up
         ib = 30 * 100e9 * training / slow         # ~100 GB/s sustained DP traffic
         v["node_infiniband_port_data_transmitted_bytes_total"] = \
-            (ib + r.normal(0, 1e10, n)).clip(0) * up
+            (ib + r.normal(0, 1e10, shape)).clip(0) * up
         v["node_infiniband_port_data_received_bytes_total"] = \
-            (ib + r.normal(0, 1e10, n)).clip(0) * up
+            (ib + r.normal(0, 1e10, shape)).clip(0) * up
         v["node_sockstat_TCP_alloc"] = (180 + 40 * load
-                                        + r.integers(-10, 10, n)) * up
+                                        + r.integers(-10, 10, shape)) * up
         v["node_context_switches_total"] = (8e5 * training / slow + 1e5 * up
-                                            + r.normal(0, 2e4, n)) * up
-        v["DCGM_FI_DEV_GPU_UTIL"] = (99.3 * training / slow - 60 * ckpt
-                                     - 80 * load + r.normal(0, 0.4, n)).clip(0, 100) * up
+                                            + r.normal(0, 2e4, shape)) * up
+        v["DCGM_FI_DEV_GPU_UTIL"] = \
+            (99.3 * training / slow - 60 * ckpt - 80 * load
+             + r.normal(0, 0.4, shape)).clip(0, 100) * up
         v["DCGM_FI_DEV_GPU_TEMP"] = (62 * training + 35
-                                     + r.normal(0, 1.5, n)) * up
+                                     + r.normal(0, 1.5, shape)) * up
         v["DCGM_FI_DEV_POWER_USAGE"] = (950 * training / slow + 120
-                                        + r.normal(0, 25, n)) * up
+                                        + r.normal(0, 25, shape)) * up
         v["DCGM_FI_DEV_FB_USED"] = (1.66e11 * training + 2e9) * up
         v["DCGM_FI_DEV_SM_CLOCK"] = (1980 * training + 210
-                                     + r.normal(0, 20, n)) * up
+                                     + r.normal(0, 20, shape)) * up
         v["DCGM_FI_DEV_NVLINK_BANDWIDTH_TOTAL"] = \
-            (30 * 4.5e11 * training / slow + r.normal(0, 1e11, n)).clip(0) * up
+            (30 * 4.5e11 * training / slow + r.normal(0, 1e11, shape)).clip(0) * up
         v["all_smi_gpu_power_watts"] = v["DCGM_FI_DEV_POWER_USAGE"] * 1.02
         v["all_smi_sys_memory_used_bytes"] = (2.1e11 + 2.4e10 * ckpt
-                                              + r.normal(0, 5e9, n)) * up
-        v["backendai_rpc_latency_ms"] = (3 + r.exponential(1.5, n)) * up
+                                              + r.normal(0, 5e9, shape)) * up
+        v["backendai_rpc_latency_ms"] = (3 + r.exponential(1.5, shape)) * up
         v["backendai_active_sessions"] = training
         v["backendai_async_task_count"] = (12 + 30 * ckpt
-                                           + r.integers(0, 5, n)) * up
-        v["backendai_agent_heartbeat_age_s"] = (r.uniform(0, 35, n)) \
+                                           + r.integers(0, 5, shape)) * up
+        v["backendai_agent_heartbeat_age_s"] = r.uniform(0, 35, shape) \
             + 600 * (1 - up)
+
+        # persistent counters: per-tick increments, then a cumulative sum so
+        # every tick of the span observes the running value
+        corr_inc = (r.random(shape) < 0.001).astype(float)
+        uncorr_inc = np.zeros(shape)
 
         # gradual precursors (accelerating correctable remaps + thermal /
         # clock / latency drift, paper Fig 4): multiple metrics deviate so
         # the multi-signal vote can fire BEFORE the XID for long-lead cases
         for node, (onset, until) in self.accel_nodes.items():
-            if onset <= t_h < until:
-                prog = min((t_h - onset) / 0.5, 4.0)
-                self.remap_corr[node] += 0.4 * (1 + (t_h - onset)) ** 1.5
-                v["DCGM_FI_DEV_GPU_TEMP"][node] += 5.0 * prog
-                v["DCGM_FI_DEV_POWER_USAGE"][node] += 60.0 * prog
-                v["DCGM_FI_DEV_SM_CLOCK"][node] -= 30.0 * prog
-                v["backendai_rpc_latency_ms"][node] += 4.0 * prog
-        # background slow accumulation
-        self.remap_corr += r.random(n) < 0.001
+            active = (ts >= onset) & (ts < until)
+            if not active.any():
+                continue
+            # clamp dt at 0 outside the window: a negative base under the
+            # fractional power would give NaN, and NaN * 0-mask is still NaN
+            dt = np.where(active, ts - onset, 0.0)
+            prog = np.minimum(dt / 0.5, 4.0) * active
+            corr_inc[:, node] += 0.4 * (1 + dt) ** 1.5 * active
+            v["DCGM_FI_DEV_GPU_TEMP"][:, node] += 5.0 * prog
+            v["DCGM_FI_DEV_POWER_USAGE"][:, node] += 60.0 * prog
+            v["DCGM_FI_DEV_SM_CLOCK"][:, node] -= 30.0 * prog
+            v["backendai_rpc_latency_ms"][:, node] += 4.0 * prog
 
-        xid_now = np.zeros(n)
-        for ev in failures_now:
+        # abrupt failure signatures, pinned to their scrape tick
+        xid_now = np.zeros(shape)
+        for row, ev in failure_rows:
             node = ev.node
             if ev.kind == "xid":
-                xid_now[node] = ev.xid
+                xid_now[row, node] = ev.xid
                 if ev.xid in (79, 145, 149):          # NVLink / bus fault
-                    v["node_intr_total"][node] = r.uniform(70e3, 100e3)
-                    v["node_procs_running"][node] = 0.0
-                    v["DCGM_FI_DEV_NVLINK_BANDWIDTH_TOTAL"][node] = 0.0
-                    v["DCGM_FI_DEV_GPU_UTIL"][node] = 0.0
+                    v["node_intr_total"][row, node] = r.uniform(70e3, 100e3)
+                    v["node_procs_running"][row, node] = 0.0
+                    v["DCGM_FI_DEV_NVLINK_BANDWIDTH_TOTAL"][row, node] = 0.0
+                    v["DCGM_FI_DEV_GPU_UTIL"][row, node] = 0.0
                 elif ev.xid == 94:                     # ECC
-                    v["node_mountstats_nfs_operations_response_time_seconds_total:GETATTR"][node] += 3.0
-                    v["node_vmstat_pgpgout"][node] += 4e6
-                    self.remap_uncorr[node] += r.integers(1, 3)
-                    v["node_procs_running"][node] = 0.0
+                    v["node_mountstats_nfs_operations_response_time_seconds_total:GETATTR"][row, node] += 3.0
+                    v["node_vmstat_pgpgout"][row, node] += 4e6
+                    uncorr_inc[row, node] += r.integers(1, 3)
+                    v["node_procs_running"][row, node] = 0.0
                 elif ev.xid == 119:                    # GSP RPC timeout
-                    v["backendai_rpc_latency_ms"][node] += 500
-                    v["DCGM_FI_DEV_SM_CLOCK"][node] = 210
-                    v["DCGM_FI_DEV_GPU_UTIL"][node] = 0.0
+                    v["backendai_rpc_latency_ms"][row, node] += 500
+                    v["DCGM_FI_DEV_SM_CLOCK"][row, node] = 210
+                    v["DCGM_FI_DEV_GPU_UTIL"][row, node] = 0.0
                 else:                                  # 31/43 app-level
                     # dead worker: host stops generating device-driven load
-                    v["node_procs_running"][node] = 0.0
-                    v["DCGM_FI_DEV_GPU_UTIL"][node] = 0.0
-                    v["node_intr_total"][node] = r.uniform(90e3, 130e3)
-                    v["node_context_switches_total"][node] = r.uniform(1e5, 2e5)
-                    v["DCGM_FI_DEV_POWER_USAGE"][node] = r.uniform(120, 180)
-                    v["DCGM_FI_DEV_NVLINK_BANDWIDTH_TOTAL"][node] = 0.0
+                    v["node_procs_running"][row, node] = 0.0
+                    v["DCGM_FI_DEV_GPU_UTIL"][row, node] = 0.0
+                    v["node_intr_total"][row, node] = r.uniform(90e3, 130e3)
+                    v["node_context_switches_total"][row, node] = \
+                        r.uniform(1e5, 2e5)
+                    v["DCGM_FI_DEV_POWER_USAGE"][row, node] = r.uniform(120, 180)
+                    v["DCGM_FI_DEV_NVLINK_BANDWIDTH_TOTAL"][row, node] = 0.0
             elif ev.kind == "unreachable":
                 for key in v:
-                    v[key][node] = 0.0
-                v["backendai_agent_heartbeat_age_s"][node] = 600.0
+                    v[key][row, node] = 0.0
+                v["backendai_agent_heartbeat_age_s"][row, node] = 600.0
 
         v["DCGM_FI_DEV_XID_ERRORS"] = xid_now
-        v["DCGM_FI_DEV_ROW_REMAP_CORRECTABLE"] = self.remap_corr.copy()
-        v["DCGM_FI_DEV_ROW_REMAP_UNCORRECTABLE"] = self.remap_uncorr.copy()
+        corr_series = self.remap_corr[None, :] + np.cumsum(corr_inc, axis=0)
+        uncorr_series = self.remap_uncorr[None, :] + np.cumsum(uncorr_inc,
+                                                              axis=0)
+        self.remap_corr = corr_series[-1].copy()
+        self.remap_uncorr = uncorr_series[-1].copy()
+        v["DCGM_FI_DEV_ROW_REMAP_CORRECTABLE"] = corr_series
+        v["DCGM_FI_DEV_ROW_REMAP_UNCORRECTABLE"] = uncorr_series
 
-        # inert padding metrics (white noise — detector must not alarm on them)
-        for i in range(N_PAD_METRICS):
-            v[f"aux_metric_{i:03d}"] = r.normal(50, 5, n) * up
+        # inert padding metrics (white noise — detector must not alarm on
+        # them); one float32 draw for the whole pad block (the detector's
+        # robust z-scores don't need float64 on ~N(50,5) noise)
+        if self.n_pad:
+            pads = 5.0 * r.standard_normal((self.n_pad, T, n),
+                                           dtype=np.float32) + np.float32(50.0)
+            pads *= up[None].astype(np.float32)
+            for i in range(self.n_pad):
+                v[f"aux_metric_{i:03d}"] = pads[i]
         return v

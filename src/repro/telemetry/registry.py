@@ -56,25 +56,43 @@ class MetricRegistry:
 
 class TimeSeriesStore:
     """Column store: metric -> (n_ticks, n_nodes) array.  VictoriaMetrics
-    stand-in; everything the precursor analysis needs is window queries."""
+    stand-in; everything the precursor analysis needs is window queries.
+
+    Internally each metric holds a list of 2-D chunks — one row per
+    single-tick ``append``, one multi-row block per ``append_batch`` — and
+    ``series`` consolidates lazily, so batched producers never pay a
+    per-tick Python cost."""
 
     def __init__(self, n_nodes: int):
         self.n_nodes = n_nodes
         self.ticks: List[float] = []
-        self.data: Dict[str, List[np.ndarray]] = {}
+        self.data: Dict[str, List[np.ndarray]] = {}   # name -> 2-D chunks
 
     def append(self, t: float, snapshot: Dict[str, np.ndarray]):
         self.ticks.append(t)
         for name, vals in snapshot.items():
-            self.data.setdefault(name, []).append(vals)
+            arr = np.asarray(vals)
+            self.data.setdefault(name, []).append(arr.reshape(1, -1))
+
+    def append_batch(self, ts: np.ndarray, snapshot: Dict[str, np.ndarray]):
+        """Append a whole span at once: ``ts`` (T,), values (T, n_nodes)."""
+        if len(ts) == 0:
+            return
+        self.ticks.extend(float(t) for t in ts)
+        for name, vals in snapshot.items():
+            arr = np.asarray(vals)
+            self.data.setdefault(name, []).append(arr)
 
     def series(self, name: str) -> np.ndarray:
-        return np.asarray(self.data[name])          # (n_ticks, n_nodes)
+        chunks = self.data[name]
+        if len(chunks) > 1:                         # consolidate + cache
+            self.data[name] = chunks = [np.concatenate(chunks, axis=0)]
+        return chunks[0]                            # (n_ticks, n_nodes)
 
     def window(self, name: str, t0: float, t1: float) -> np.ndarray:
         ts = np.asarray(self.ticks)
         m = (ts >= t0) & (ts < t1)
-        return np.asarray(self.data[name])[m]
+        return self.series(name)[m]
 
     def times(self) -> np.ndarray:
         return np.asarray(self.ticks)
@@ -84,4 +102,4 @@ class TimeSeriesStore:
         return list(self.data)
 
     def nbytes(self) -> int:
-        return sum(len(v) * self.n_nodes * 8 for v in self.data.values())
+        return sum(c.nbytes for v in self.data.values() for c in v)

@@ -3,7 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.checkpoint.youngdaly import (cost_fraction, mc_cost_fraction,
                                         t_opt_s)

@@ -2,7 +2,7 @@
 data pipeline, health checks, telemetry."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.core.exclusion import ExclusionTracker
 from repro.core.failures import FailureInjector

@@ -1,7 +1,7 @@
 """Straggler detection + elastic allocation (beyond-paper features)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.core.scheduler import GangScheduler
 from repro.core.session import Session
