@@ -1,14 +1,16 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only substr]
+    PYTHONPATH=src python -m benchmarks.run [--only substr] [--json path]
 
-Prints ``name,us_per_call,derived`` CSV.  Set REPRO_BENCH_FAST=1 for the
+Prints ``name,us_per_call,derived`` CSV; ``--json`` additionally writes the
+rows as a JSON document (the CI artifact).  Set REPRO_BENCH_FAST=1 for the
 abbreviated suite (CI).  The roofline table (from the dry-run artifacts) is
 appended when benchmarks/results/dryrun_baseline.json exists.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -17,23 +19,37 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None,
+                    help="also write rows as JSON to this path")
     args = ap.parse_args()
 
     from benchmarks import bench_kernels, bench_ops
+    from benchmarks.common import FAST
 
     benches = bench_ops.all_benches() + bench_kernels.all_benches()
     print("name,us_per_call,derived")
     failures = 0
+    rows = []
     for bench in benches:
         if args.only and args.only not in bench.__name__:
             continue
         try:
             for name, us, derived in bench():
+                rows.append({"name": name, "us_per_call": us,
+                             "derived": derived})
                 print(f"{name},{us:.1f},\"{derived}\"", flush=True)
         except Exception as e:
             failures += 1
             traceback.print_exc()
+            rows.append({"name": bench.__name__, "us_per_call": None,
+                         "derived": f"ERROR: {e}"})
             print(f"{bench.__name__},nan,\"ERROR: {e}\"", flush=True)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"fast": FAST, "only": args.only,
+                       "failures": failures, "rows": rows}, f, indent=2)
+        print(f"json written to {args.json}", file=sys.stderr)
 
     # roofline summary (if the dry-run has produced artifacts)
     try:

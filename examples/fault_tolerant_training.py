@@ -8,16 +8,23 @@ XID-branching policy (§4.3.5).
 
     PYTHONPATH=src python examples/fault_tolerant_training.py
 """
+import tempfile
+
 from repro.launch.train import run_training
 
 
 def main():
     for policy in ("fixed", "xid_branch"):
         print(f"\n=== policy: {policy} ===")
-        rep = run_training(
-            "stablelm-3b", steps=60, batch=2, seq=64,
-            fail_at=(22, 41), fail_xid=94, retry_policy=policy,
-            ckpt_dir=f"/tmp/repro_ft_{policy}", log_every=20)
+        # fresh checkpoint dir per run: restoring a stale step-60
+        # checkpoint from a previous invocation would skip the retries
+        # this demo exists to show
+        with tempfile.TemporaryDirectory(
+                prefix=f"repro_ft_{policy}_") as ckpt_dir:
+            rep = run_training(
+                "stablelm-3b", steps=60, batch=2, seq=64,
+                fail_at=(22, 41), fail_xid=94, retry_policy=policy,
+                ckpt_dir=ckpt_dir, log_every=20)
         print(f"steps={rep.steps_done} failures={rep.n_failures} "
               f"restarts={rep.n_restarts} saves={rep.checkpoint_saves} "
               f"final_loss={rep.final_loss:.4f} "

@@ -37,7 +37,17 @@ def main():
                     choices=("process", "thread", "serial"))
     ap.add_argument("--report", default=None,
                     help="also write the full markdown report here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny deterministic CI sweep: paper-faithful + "
+                         "storage-fabric, 1 seed, 3 days, serial, no F1")
     args = ap.parse_args()
+
+    if args.smoke:
+        args.scenarios = "paper-faithful,storage-fabric"
+        args.seeds = "0"
+        args.days = 3.0
+        args.telemetry_days = 0.0
+        args.executor = "serial"
 
     names = list_scenarios() if args.scenarios == "all" \
         else [s.strip() for s in args.scenarios.split(",") if s.strip()]

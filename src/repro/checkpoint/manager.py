@@ -5,9 +5,15 @@ Phase 1 (BLOCKING, pauses training): device state -> host staging buffer
 ``jax.device_get`` into a reused buffer pool).
 
 Phase 2 (ASYNC, training resumes): staging buffer -> storage through the
-RPC-slot-limited NFS client model (timing) and a real local filesystem
-backend (durability), with per-tensor checksums (the ckpt_pack kernel path
-on TPU; xor-fold in numpy here).
+RPC-slot-limited NFS client view of the shared storage fabric (timing) and
+a real local filesystem backend (durability).  Float32 tensors route
+through the ``ckpt_pack`` path (Pallas kernel on TPU, its jitted XLA
+reference elsewhere): the bf16 payload halves the RPC-constrained wire
+volume that the fabric charges for the save, and the per-block wrapping
+uint32 checksums replace the numpy xor-fold for integrity.  Non-f32
+tensors keep the xor-fold and full-width payloads.  The on-disk bytes are
+always the exact full-precision staging buffers, so restore-and-resume
+reproduces the uninterrupted run bit-for-bit (paper Table 6).
 
 Restore follows the load path: files -> host buffers (verify checksums) ->
 device.  The save cascade ordering (GPU pause -> staging -> write() ->
@@ -27,6 +33,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.storage import NFSClientSim, TransferResult
+from repro.storage.fabric import StorageFabric
 
 
 # ---------------------------------------------------------------------------
@@ -43,7 +50,7 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 
 def xor_fold_checksum(buf: np.ndarray) -> int:
-    """Block checksum (the numpy oracle of kernels/ckpt_pack)."""
+    """Whole-tensor xor-fold (the non-f32 / legacy checksum)."""
     raw = buf.tobytes()
     pad = (-len(raw)) % 8
     arr = np.frombuffer(raw + b"\x00" * pad, dtype=np.uint64)
@@ -58,6 +65,7 @@ class SaveTimeline:
     t_write_done: float = 0.0     # write() path complete (real fs)
     t_rpc_done: float = 0.0       # modeled NFS RPC drain complete
     bytes_staged: int = 0
+    bytes_wire: int = 0           # RPC volume after ckpt_pack (bf16 for f32)
     rpc: Optional[TransferResult] = None
 
     @property
@@ -79,18 +87,41 @@ class CheckpointRecord:
     path: str
     bytes: int
     timeline: SaveTimeline
-    checksums: Dict[str, int] = field(default_factory=dict)
+    # key -> xor-fold int, or uint32 block-checksum array (ckpt_pack)
+    checksums: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class RestoreResult:
+    """Restored state + the simulated load timing.
+
+    Iterates as ``(state, step)`` so existing ``state, step = restore()``
+    call sites keep working."""
+    state: Any
+    step: int
+    load_rpc: Optional[TransferResult] = None
+
+    def __iter__(self):
+        return iter((self.state, self.step))
 
 
 class CheckpointManager:
     def __init__(self, directory, *, keep: int = 3,
                  nfs: Optional[NFSClientSim] = None,
-                 simulate_rpc: bool = True):
+                 fabric: Optional[StorageFabric] = None,
+                 simulate_rpc: bool = True,
+                 pack: str = "kernel"):
+        if pack not in ("kernel", "xor"):
+            raise ValueError(f"unknown pack mode {pack!r}")
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
-        self.nfs = nfs or NFSClientSim()
+        # the NFS client view shares the (possibly passed-in) fabric, so
+        # manager timing reflects cluster-scale contention
+        self.nfs = nfs or NFSClientSim(fabric=fabric)
         self.simulate_rpc = simulate_rpc
+        self.pack = pack
+        self.last_load_rpc: Optional[TransferResult] = None
         self._staging: Dict[str, np.ndarray] = {}   # reused buffer pool
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -129,7 +160,8 @@ class CheckpointManager:
                 self._write_files(step, record)
                 tl.t_write_done = time.perf_counter()
                 if self.simulate_rpc:
-                    tl.rpc = self.nfs.checkpoint_save(bytes_per_node=total)
+                    tl.rpc = self.nfs.checkpoint_save(
+                        bytes_per_node=tl.bytes_wire)
                 tl.t_rpc_done = time.perf_counter()
                 self.records.append(record)
                 self._gc()
@@ -147,15 +179,31 @@ class CheckpointManager:
         tmp = d.with_suffix(".tmp")
         tmp.mkdir(parents=True, exist_ok=True)
         index = {}
+        wire = 0
         with open(tmp / "data.bin", "wb") as f:
             for key, buf in self._staging.items():
                 start = f.tell()
                 f.write(buf.tobytes())
-                csum = xor_fold_checksum(buf)
-                record.checksums[key] = csum
-                index[key] = {"offset": start, "nbytes": buf.nbytes,
-                              "shape": list(buf.shape), "dtype": str(buf.dtype),
-                              "checksum": csum}
+                entry = {"offset": start, "nbytes": buf.nbytes,
+                         "shape": list(buf.shape), "dtype": str(buf.dtype)}
+                if self.pack == "kernel" and buf.dtype == np.float32:
+                    # ckpt_pack path: bf16 wire payload + block checksums
+                    from repro.kernels.ckpt_pack.ops import ckpt_pack_host
+                    _, chk = ckpt_pack_host(buf)
+                    chk = np.asarray(chk)
+                    record.checksums[key] = chk
+                    entry["checksum_kind"] = "ckpt_pack"
+                    entry["checksums"] = chk.tolist()
+                    # bf16 halves the fp32 volume; the kernel's zero block
+                    # padding is a layout artifact, not wire payload
+                    wire += buf.nbytes // 2
+                else:
+                    csum = xor_fold_checksum(buf)
+                    record.checksums[key] = csum
+                    entry["checksum"] = csum
+                    wire += buf.nbytes
+                index[key] = entry
+        record.timeline.bytes_wire = wire
         (tmp / "index.json").write_text(json.dumps(
             {"step": step, "tensors": index}))
         if d.exists():
@@ -181,34 +229,64 @@ class CheckpointManager:
                  if p.is_dir()]
         return max(steps) if steps else None
 
+    def _read_index(self, d: Path, step: int) -> dict:
+        try:
+            meta = json.loads((d / "index.json").read_text())
+            meta["tensors"]        # presence check: partial writes
+            return meta
+        except (json.JSONDecodeError, KeyError, FileNotFoundError) as e:
+            raise IOError(
+                f"corrupt or partial checkpoint index for step {step} "
+                f"under {d}: {e}") from e
+
+    @staticmethod
+    def _verify_tensor(key: str, step: int, arr: np.ndarray, info: dict):
+        kind = info.get("checksum_kind", "xor")
+        if kind == "ckpt_pack":
+            from repro.kernels.ckpt_pack.ref import block_checksums_np
+            got = block_checksums_np(arr)
+            want = np.asarray(info["checksums"], dtype=np.uint32)
+            if got.shape != want.shape or not np.array_equal(got, want):
+                raise IOError(
+                    f"ckpt_pack block-checksum mismatch for {key} "
+                    f"@step {step}")
+        elif xor_fold_checksum(arr) != info["checksum"]:
+            raise IOError(f"checksum mismatch for {key} @step {step}")
+
     def restore(self, step: Optional[int] = None, *, like=None,
-                verify: bool = True):
+                verify: bool = True) -> RestoreResult:
         """Load a checkpoint; if ``like`` is given, reassemble that pytree
-        structure (values replaced), else return the flat dict."""
+        structure (values replaced), else the flat dict.  Returns a
+        `RestoreResult` (iterates as ``(state, step)``) carrying the
+        simulated load timing."""
         self.wait()
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         d = self._step_dir(step)
-        meta = json.loads((d / "index.json").read_text())
+        meta = self._read_index(d, step)
         flat: Dict[str, np.ndarray] = {}
         rpc_bytes = 0
         with open(d / "data.bin", "rb") as f:
             for key, info in meta["tensors"].items():
                 f.seek(info["offset"])
                 raw = f.read(info["nbytes"])
+                if len(raw) != info["nbytes"]:
+                    raise IOError(f"truncated payload for {key} "
+                                  f"@step {step}")
                 arr = np.frombuffer(raw, dtype=np.dtype(info["dtype"])) \
                     .reshape(info["shape"]).copy()
-                if verify and xor_fold_checksum(arr) != info["checksum"]:
-                    raise IOError(f"checksum mismatch for {key} @step {step}")
+                if verify:
+                    self._verify_tensor(key, step, arr, info)
                 flat[key] = arr
                 rpc_bytes += info["nbytes"]
+        load_rpc = None
         if self.simulate_rpc:
-            self.last_load_rpc = self.nfs.checkpoint_load(
-                bytes_per_node=rpc_bytes)
+            load_rpc = self.nfs.checkpoint_load(bytes_per_node=rpc_bytes)
+        self.last_load_rpc = load_rpc
         if like is None:
-            return flat, step
+            return RestoreResult(state=flat, step=step, load_rpc=load_rpc)
         leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
         new_leaves = []
         for path, leaf in leaves_with_path[0]:
@@ -217,7 +295,8 @@ class CheckpointManager:
             arr = flat[key]
             new_leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype)
                               if hasattr(leaf, "dtype") else arr)
-        return jax.tree_util.tree_unflatten(leaves_with_path[1], new_leaves), step
+        state = jax.tree_util.tree_unflatten(leaves_with_path[1], new_leaves)
+        return RestoreResult(state=state, step=step, load_rpc=load_rpc)
 
     # ------------------------------------------------------------------
 

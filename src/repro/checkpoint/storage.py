@@ -1,4 +1,4 @@
-"""NFS RPC-slot storage model — paper F2 / §4.2.5.
+"""Per-client NFS RPC-slot view of the shared storage fabric — paper F2.
 
 The paper's key finding: checkpoint I/O uses only 1.4-10.4% of the 200 Gbps
 RoCE link because the bottleneck is the 128-slot NFS RPC layer, not the
@@ -9,29 +9,45 @@ simulation over request arrivals yields per-request latency decomposition,
 achieved bandwidth, and therefore the bandwidth paradox — *derived*, not
 assumed.
 
-Service-time constants are taken from paper Table 13 (WRITE 126 ms,
-READ 27.3 ms per-RPC network+server time).
+Since the cluster-scale refactor this module is a thin per-client window
+onto `repro.storage.StorageFabric`: the per-RPC service times are no
+longer free constants but the fabric's *effective* service at the
+campaign's gang fanin — WRITE at the ~39-node effective writeback fanin
+and READ at the 60-node restart-load fanin reproduce the paper's Table 13
+values (126 ms / 27.3 ms) to within 2%.  Passing explicit
+``write_service_s`` / ``read_service_s`` (e.g. degraded-storage
+scenarios) bypasses the derivation.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Literal, Optional
 
 import numpy as np
 
-LINK_BW_BYTES = 25e9          # 200 Gbps RoCE per node
+from repro.storage.fabric import (LINK_BW_BYTES, STD_READ_SLOTS,
+                                  STD_WRITE_SLOTS, StorageFabric)
+
+__all__ = ["LINK_BW_BYTES", "NFSConfig", "NFSClientSim", "RPCResult",
+           "TransferResult"]
 
 
 @dataclass(frozen=True)
 class NFSConfig:
     n_slots: int = 128                 # client RPC slot table (paper)
-    write_service_s: float = 0.126     # per-RPC server+network, WRITE
-    read_service_s: float = 0.0273     # per-RPC server+network, READ
+    # None -> derived from the storage fabric at the fanins below
+    # (fabric-effective Table 13: WRITE ~126 ms, READ ~27.3 ms)
+    write_service_s: Optional[float] = None
+    read_service_s: Optional[float] = None
     wsize: int = 1 << 20               # 1 MiB write RPCs
     rsize: int = 256 << 10             # 256 KiB effective read RPCs
     service_jitter: float = 0.15       # lognormal-ish spread
     n_connections: int = 1             # nconnect mounts (slots multiply)
+    write_fanin: int = 39              # effective concurrent writers: saves
+                                       #   destagger in the writeback window
+    read_fanin: int = 60               # restart loads: the whole gang
 
 
 @dataclass
@@ -79,31 +95,58 @@ class TransferResult:
 
 
 class NFSClientSim:
-    """Discrete-event simulation of one node's NFS client RPC slot table."""
+    """Discrete-event simulation of one node's NFS client RPC slot table.
 
-    def __init__(self, config: NFSConfig = NFSConfig(), seed: int = 0):
-        self.config = config
+    Service times come from the shared ``StorageFabric`` (contention at the
+    configured fanin baked in) unless the config pins them explicitly.
+    """
+
+    def __init__(self, config: Optional[NFSConfig] = None, seed: int = 0,
+                 fabric: Optional[StorageFabric] = None):
+        self.fabric = fabric or StorageFabric()
+        self.config = self._resolve_config(config or NFSConfig())
         self.rng = np.random.default_rng(seed)
 
-    def _service_time(self, op: str) -> float:
-        base = self.config.write_service_s if op == "write" \
-            else self.config.read_service_s
-        if self.config.service_jitter <= 0:
+    def _resolve_config(self, config: NFSConfig) -> NFSConfig:
+        """Fill None service times from the fabric.
+
+        Derivation uses the fleet-standard slot tables, not this client's
+        local override: the fanin inflation reflects what the REST of the
+        cluster keeps in flight at the server."""
+        w, r = config.write_service_s, config.read_service_s
+        if w is None:
+            w = self.fabric.service_time_s("write", config.write_fanin,
+                                           STD_WRITE_SLOTS, config.wsize)
+        if r is None:
+            r = self.fabric.service_time_s("read", config.read_fanin,
+                                           STD_READ_SLOTS, config.rsize)
+        return dataclasses.replace(config, write_service_s=w,
+                                   read_service_s=r)
+
+    def _service_time(self, op: str, cfg: NFSConfig) -> float:
+        base = cfg.write_service_s if op == "write" else cfg.read_service_s
+        if cfg.service_jitter <= 0:
             return base
         return float(base * self.rng.lognormal(
-            mean=0.0, sigma=self.config.service_jitter))
+            mean=0.0, sigma=cfg.service_jitter))
 
     def transfer(self, op: Literal["write", "read"], total_bytes: int,
                  arrival_rate_rpcs_s: Optional[float] = None,
-                 burst: int = 1, keep_results: bool = False) -> TransferResult:
+                 burst: int = 1, keep_results: bool = False,
+                 config: Optional[NFSConfig] = None) -> TransferResult:
         """Simulate moving ``total_bytes`` through the slot table.
 
         ``arrival_rate_rpcs_s``: request generation rate.  Checkpoint saves
         dump everything at once (writeback flush -> effectively infinite
         arrival rate -> pure slot-queueing, the paper's 92% slot-wait case);
         loads are paced by readahead (finite rate).
+
+        ``config``: per-call override (e.g. the load path's nconnect=2
+        mount) — the shared ``self.config`` is never mutated, so a load is
+        safe against a concurrent save from the manager's flush thread.
         """
-        cfg = self.config
+        cfg = self._resolve_config(config) if config is not None \
+            else self.config
         rpc_size = cfg.wsize if op == "write" else cfg.rsize
         n = max(int(np.ceil(total_bytes / rpc_size)), 1)
 
@@ -129,7 +172,7 @@ class NFSClientSim:
             t_slot = heapq.heappop(slots)
             start = max(t_arr, t_slot)
             waits[i] = start - t_arr
-            svc = self._service_time(op)
+            svc = self._service_time(op, cfg)
             services[i] = svc
             fin = start + svc
             heapq.heappush(slots, fin)
@@ -155,13 +198,9 @@ class NFSClientSim:
         """Sustained read at the paper's observed 8-9k req/s/node pace.
 
         Loads run over nconnect=2 mounts (two slot tables) — required to
-        sustain >128/0.0273 = 4.7k req/s; documented in DESIGN.md §8."""
-        import dataclasses
-        prev = self.config
-        self.config = dataclasses.replace(prev, n_connections=2)
-        try:
-            return self.transfer("read", bytes_per_node,
-                                 arrival_rate_rpcs_s=readahead_rpcs_s,
-                                 burst=512)
-        finally:
-            self.config = prev
+        sustain the observed request rate; the override is a per-call
+        config, never a mutation of the shared one."""
+        cfg = dataclasses.replace(self.config, n_connections=2)
+        return self.transfer("read", bytes_per_node,
+                             arrival_rate_rpcs_s=readahead_rpcs_s,
+                             burst=512, config=cfg)

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.checkpoint.youngdaly import MTBF_H_PAPER
 from repro.core.exclusion import ExclusionTracker
+from repro.storage.fabric import FabricConfig, StorageFabric
 from repro.core.failures import FailureEvent, FailureInjector
 from repro.core.retry import Attempt, Chain, RetryConfig, RetryEngine
 from repro.core.scheduler import GangScheduler
@@ -66,6 +67,19 @@ class CampaignConfig:
     loading_time_h: float = 31.0 / 60.0      # warm-cache restart loading
     loading_cold_h: float = 58.0 / 60.0      # cold cache (node replaced /
                                              #   full reboot; paper §4.2.4)
+    # shared-NFS storage fabric: when set, checkpoint_save_s and the two
+    # loading times above are REPLACED by fabric queries at the gang fanin
+    # (save: the ckpt_pack bf16 wire volume bursting from job_nodes
+    # writers; load: restore_bytes_per_node read by the whole gang on top
+    # of the non-storage loading overhead)
+    storage: Optional[FabricConfig] = None
+    storage_slots: int = 128                 # client RPC slot table (loads
+                                             #   run over nconnect=2 -> 2x)
+    ckpt_bytes_per_node: int = 20 << 30
+    ckpt_wire_ratio: float = 0.5             # fp32 -> bf16 ckpt_pack payload
+    restore_bytes_per_node: int = 200 << 30
+    loading_overhead_h: float = 29.5 / 60.0  # container/NCCL/dataset init
+    loading_overhead_cold_h: float = 56.5 / 60.0
     # failure-class behaviour
     p_software_failure: float = 0.5          # NCCL/driver-level (structural)
     p_transient_retry_fail: float = 0.4      # residual issue on early retries
@@ -412,8 +426,30 @@ class _TelemetryBatcher:
 
 class ClusterSim:
     def __init__(self, config: CampaignConfig = CampaignConfig()):
+        self.fabric: Optional[StorageFabric] = None
+        if config.storage is not None:
+            config = self._resolve_storage(config)
         self.cfg = config
         self.rng = np.random.default_rng(config.seed)
+
+    def _resolve_storage(self, cfg: CampaignConfig) -> CampaignConfig:
+        """Replace the checkpoint-timing constants with fabric queries at
+        the gang fanin — the layer where the paper's scale-emergent F2
+        bottleneck enters the campaign simulation."""
+        import dataclasses
+        self.fabric = StorageFabric(cfg.storage)
+        wire = int(cfg.ckpt_bytes_per_node * cfg.ckpt_wire_ratio)
+        save_s = self.fabric.expected_duration_s(
+            "write", cfg.job_nodes, wire,
+            slots_per_client=cfg.storage_slots)
+        read_h = self.fabric.expected_duration_s(
+            "read", cfg.job_nodes, cfg.restore_bytes_per_node,
+            slots_per_client=2 * cfg.storage_slots) / 3600.0
+        return dataclasses.replace(
+            cfg,
+            checkpoint_save_s=save_s,
+            loading_time_h=cfg.loading_overhead_h + read_h,
+            loading_cold_h=cfg.loading_overhead_cold_h + read_h)
 
     def _make_injector(self) -> FailureInjector:
         cfg = self.cfg
@@ -429,7 +465,12 @@ class ClusterSim:
             return None, None
         n_pad = N_PAD_METRICS if cfg.telemetry_pad_metrics is None \
             else cfg.telemetry_pad_metrics
-        exporters = ExporterSuite(cfg.n_nodes, seed=cfg.seed, n_pad=n_pad)
+        # non-fabric campaigns still export storage signals, from a
+        # paper-default fabric at THIS campaign's gang fanin
+        fabric = self.fabric if self.fabric is not None else StorageFabric()
+        exporters = ExporterSuite(
+            cfg.n_nodes, seed=cfg.seed, n_pad=n_pad,
+            storage_levels=fabric.telemetry_levels(cfg.job_nodes))
         store = TimeSeriesStore(cfg.n_nodes)
         for ev in failures:
             if ev.precursor_lead_h > 0:

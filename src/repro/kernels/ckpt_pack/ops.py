@@ -7,12 +7,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ckpt_pack.kernel import ckpt_pack_blocks
+from repro.kernels.ckpt_pack.ref import ckpt_pack_blocks_ref
 
 BLOCK = 2048
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _pad_blocks(x, block: int):
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % block
+    return jnp.pad(flat, (0, pad)).reshape(-1, block)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -24,10 +31,22 @@ def ckpt_pack(x, *, block: int = BLOCK, interpret: bool = None):
     """
     if interpret is None:
         interpret = not _on_tpu()
-    flat = x.reshape(-1).astype(jnp.float32)
-    n = flat.shape[0]
-    pad = (-n) % block
-    flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(-1, block)
+    blocks = _pad_blocks(x, block)
     y, chk = ckpt_pack_blocks(blocks, interpret=interpret)
     return y.reshape(-1), chk.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _ckpt_pack_xla(x, *, block: int = BLOCK):
+    blocks = _pad_blocks(x, block)
+    y, chk = ckpt_pack_blocks_ref(blocks)
+    return y.reshape(-1), chk.reshape(-1)
+
+
+def ckpt_pack_host(x, *, block: int = BLOCK):
+    """ckpt_pack for the production save path: the compiled Pallas kernel
+    on TPU, the jitted XLA reference (bit-identical outputs) elsewhere —
+    interpret-mode Pallas is far too slow for checkpoint-sized tensors."""
+    if _on_tpu():
+        return ckpt_pack(x, block=block)
+    return _ckpt_pack_xla(x, block=block)

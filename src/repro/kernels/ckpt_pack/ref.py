@@ -14,6 +14,21 @@ def ckpt_pack_blocks_ref(x):
     return y, chk
 
 
+def block_checksums_np(arr: np.ndarray, block: int = 2048) -> np.ndarray:
+    """Vectorized host-side block checksums over an fp32 array's bits.
+
+    Matches the kernel's layout: flatten, zero-pad to a block multiple,
+    wrapping-uint32 sum per block.  Used by the checkpoint restore path to
+    verify payloads against the checksums the save-path kernel produced.
+    """
+    flat = np.ascontiguousarray(arr, dtype=np.float32).reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.float32)])
+    bits = flat.view(np.uint32).reshape(-1, block)
+    return (bits.astype(np.uint64).sum(axis=1) & 0xFFFFFFFF).astype(np.uint32)
+
+
 def ckpt_pack_numpy(x: np.ndarray):
     """Host-side oracle (numpy, wrapping uint32 arithmetic)."""
     bits = x.view(np.uint32).reshape(x.shape)

@@ -1,0 +1,357 @@
+"""Shared-NFS storage fabric — the cluster-scale side of paper F2 / §4.2.5.
+
+The paper's headline cross-organizational result is a storage bottleneck
+that is *absent in 2-4-node tests and only emerges at 60-node scale*:
+restart loads reach 21.5% of the 700 GB/s aggregate read maximum, save
+bursts 16.0% of the 250 GB/s write maximum, with NFS/RPC queueing and
+transport backlog rising together.  A per-client slot-table model with
+fixed service times cannot reproduce this — aggregate bandwidth would
+scale linearly with node count — so this module models the *server* side:
+
+N client RPC slot tables contend for one shared NFS server with
+
+1. **finite service capacity** — all in-flight RPCs share the server's
+   aggregate read/write bandwidth (processor sharing: an RPC of size S
+   with C total in-flight takes ``S * C / server_bw`` to move its payload);
+2. **fanin-dependent service inflation** — the server has a finite pool of
+   RPC service contexts per op class; once total in-flight exceeds it,
+   per-RPC queueing delay grows linearly with the excess (the paper's
+   NFS/RPC queueing signal); and
+3. **client transport floor** — a client draining ``slots`` concurrent
+   RPCs can never exceed its own link, so per-RPC effective service is
+   floored at ``slots * S / link_bw`` (the transport backlog regime).
+
+The per-RPC *effective service time at fanin N* is therefore
+
+    t_svc(N) = max(t_base + S*C/server_bw + t_q * max(0, C - ctx)/ctx,
+                   slots * S / link_bw),          C = N * slots_per_client
+
+and the scale-emergent collapse is *derived*: at 2-4 clients the model is
+client-link-bound (near-linear aggregate scaling, high utilization of the
+achievable ceiling); at 60+ clients the contention terms dominate and
+aggregate bandwidth collapses to the paper's fractions.  The constants
+below are calibrated so the paper's Table 13 per-RPC service times
+*emerge* from the model (READ 27.3 ms at the 60-node restart-load fanin,
+WRITE 126 ms at the ~39-node effective writeback fanin) and the 63-client
+scenarios land on 21.5% / 16.0% aggregate utilization.
+
+Two multi-client simulation engines share the service model:
+
+* ``engine="vectorized"`` (default) — numpy wave schedule over ALL
+  clients at once: each wave assigns the next ``slots`` jittered service
+  draws to the least-loaded slots of every client ((n_clients, slots)
+  array ops per wave instead of one Python heap op per RPC), tracking
+  the greedy discrete-event schedule's makespan to within one service
+  time per slot stream.
+* ``engine="event"`` — the discrete-event reference (per-client min-heap
+  over slot free times, one pop/push per RPC), kept for the parity check
+  and the speedup benchmark.
+
+``expected_duration_s`` / ``utilization`` are the deterministic analytic
+queries the campaign simulation and scenario resolution use (no RNG).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from dataclasses import dataclass
+from typing import Dict, List, Literal, Optional, Sequence
+
+import numpy as np
+
+LINK_BW_BYTES = 25e9              # 200 Gbps RoCE per node
+
+# fleet-standard client slot tables (paper: 128-slot RPC table; restart
+# loads run over nconnect=2 mounts -> two tables)
+STD_WRITE_SLOTS = 128
+STD_READ_SLOTS = 256
+STD_WSIZE = 1 << 20               # 1 MiB write RPCs
+STD_RSIZE = 256 << 10             # 256 KiB effective read RPCs
+
+Op = Literal["write", "read"]
+
+
+@dataclass(frozen=True)
+class FabricConfig:
+    """Shared NFS server + transport parameters.
+
+    The defaults are calibrated against the paper's published F2 numbers
+    (see module docstring); ``degradation`` multiplies every service-time
+    term (an overloaded/misbehaving backend), leaving the nominal
+    aggregate maxima — the utilization denominators — untouched.
+    """
+    server_read_bw: float = 700e9        # aggregate read max (paper F2)
+    server_write_bw: float = 250e9       # aggregate write max (paper F2)
+    read_contexts: int = 2048            # server RPC service contexts, READ
+    write_contexts: int = 512            # ... WRITE (stable-storage slots)
+    t_base_read_s: float = 1.5e-3        # unloaded per-RPC server+net time
+    t_base_write_s: float = 2.0e-3
+    t_queue_read_s: float = 3.0e-3       # queueing delay per unit excess
+    t_queue_write_s: float = 11.9e-3
+    client_link_bw: float = LINK_BW_BYTES
+    service_jitter: float = 0.15         # lognormal sigma (sim engines)
+    degradation: float = 1.0             # service-time multiplier
+
+    def op_params(self, op: Op):
+        """(server_bw, contexts, t_base, t_queue) for one op class."""
+        if op == "write":
+            return (self.server_write_bw, self.write_contexts,
+                    self.t_base_write_s, self.t_queue_write_s)
+        if op == "read":
+            return (self.server_read_bw, self.read_contexts,
+                    self.t_base_read_s, self.t_queue_read_s)
+        raise ValueError(f"unknown op {op!r}")
+
+
+def _std_slots(op: Op) -> int:
+    return STD_WRITE_SLOTS if op == "write" else STD_READ_SLOTS
+
+
+def _std_rpc_bytes(op: Op) -> int:
+    return STD_WSIZE if op == "write" else STD_RSIZE
+
+
+@dataclass
+class FabricTransferResult:
+    """One multi-client transfer through the shared server."""
+    op: str
+    n_clients: int
+    bytes_per_client: int
+    n_rpcs_per_client: int
+    engine: str
+    duration_s: float                     # makespan across clients
+    per_client_duration_s: np.ndarray
+    mean_slot_wait_s: float
+    mean_service_s: float
+    ceiling_bytes_s: float                # min(n*link, server max)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.n_clients * self.bytes_per_client
+
+    @property
+    def aggregate_bandwidth_bytes_s(self) -> float:
+        return self.total_bytes / self.duration_s if self.duration_s > 0 \
+            else 0.0
+
+    @property
+    def utilization(self) -> float:
+        """Achieved aggregate bandwidth over the achievable ceiling.
+
+        The ceiling is ``min(n_clients * link_bw, server_max)`` — at 63
+        clients that is the server's published maximum (the paper's 700 /
+        250 GB/s denominators); at 2-4 clients it is the clients' own
+        links, so near-linear small-scale runs score high and the
+        60-node collapse scores the paper's fractions.
+        """
+        return self.aggregate_bandwidth_bytes_s / self.ceiling_bytes_s \
+            if self.ceiling_bytes_s > 0 else 0.0
+
+
+class StorageFabric:
+    """N client slot tables contending for one shared NFS server."""
+
+    def __init__(self, config: FabricConfig = FabricConfig()):
+        self.config = config
+
+    # ------------------------------------------------------------------
+    # analytic service model (deterministic; used by sim + campaign)
+    # ------------------------------------------------------------------
+
+    def service_time_s(self, op: Op, fanin: int,
+                       slots_per_client: Optional[int] = None,
+                       rpc_bytes: Optional[int] = None) -> float:
+        """Effective per-RPC service time with ``fanin`` concurrent clients."""
+        cfg = self.config
+        slots = slots_per_client if slots_per_client is not None \
+            else _std_slots(op)
+        size = rpc_bytes if rpc_bytes is not None else _std_rpc_bytes(op)
+        server_bw, ctx, t_base, t_queue = cfg.op_params(op)
+        inflight = max(int(fanin), 1) * slots
+        t = t_base + size * inflight / server_bw \
+            + t_queue * max(0, inflight - ctx) / ctx
+        t *= cfg.degradation
+        # transport floor: `slots` in flight cannot drain faster than the
+        # client link (backlog accumulates in the TCP transmit queue)
+        return max(t, slots * size / cfg.client_link_bw)
+
+    def per_client_bandwidth_bytes_s(self, op: Op, fanin: int,
+                                     slots_per_client: Optional[int] = None,
+                                     rpc_bytes: Optional[int] = None) -> float:
+        slots = slots_per_client if slots_per_client is not None \
+            else _std_slots(op)
+        size = rpc_bytes if rpc_bytes is not None else _std_rpc_bytes(op)
+        return slots * size / self.service_time_s(op, fanin, slots, size)
+
+    def ceiling_bytes_s(self, op: Op, n_clients: int) -> float:
+        server_bw, _, _, _ = self.config.op_params(op)
+        return min(n_clients * self.config.client_link_bw, server_bw)
+
+    def utilization(self, op: Op, n_clients: int,
+                    slots_per_client: Optional[int] = None,
+                    rpc_bytes: Optional[int] = None) -> float:
+        """Aggregate achieved bandwidth over the achievable ceiling."""
+        agg = n_clients * self.per_client_bandwidth_bytes_s(
+            op, n_clients, slots_per_client, rpc_bytes)
+        return agg / self.ceiling_bytes_s(op, n_clients)
+
+    def expected_duration_s(self, op: Op, n_clients: int,
+                            bytes_per_client: int,
+                            slots_per_client: Optional[int] = None,
+                            rpc_bytes: Optional[int] = None) -> float:
+        """Deterministic transfer duration (mean over service jitter)."""
+        slots = slots_per_client if slots_per_client is not None \
+            else _std_slots(op)
+        size = rpc_bytes if rpc_bytes is not None else _std_rpc_bytes(op)
+        n_rpcs = max(int(np.ceil(bytes_per_client / size)), 1)
+        t_svc = self.service_time_s(op, n_clients, slots, size)
+        jmean = float(np.exp(self.config.service_jitter ** 2 / 2.0))
+        # a transfer can never beat one RPC service time: a final partial
+        # wave (n_rpcs < slots) still costs a full service round
+        return max(n_rpcs / slots, 1.0) * t_svc * jmean
+
+    def scaling_curve(self, op: Op, node_counts: Sequence[int] = (
+            2, 4, 8, 16, 32, 63)) -> List[Dict[str, float]]:
+        """The F2 deliverable: aggregate bandwidth vs node count."""
+        rows = []
+        for n in node_counts:
+            bw = n * self.per_client_bandwidth_bytes_s(op, n)
+            rows.append({
+                "nodes": int(n),
+                "service_ms": self.service_time_s(op, n) * 1e3,
+                "aggregate_gbs": bw / 1e9,
+                "utilization": bw / self.ceiling_bytes_s(op, n),
+            })
+        return rows
+
+    # ------------------------------------------------------------------
+    # telemetry levels (exported by the registry during save/load spans)
+    # ------------------------------------------------------------------
+
+    def telemetry_levels(self, fanin: int) -> Dict[str, float]:
+        """Characteristic per-client RPC queue depth / transport backlog
+        while a save or load is in flight at ``fanin`` (steady state:
+        every slot busy plus this client's share of the server queue;
+        degraded service holds requests in queue proportionally longer,
+        so the detector sees degraded campaigns deviate)."""
+        cfg = self.config
+        out: Dict[str, float] = {}
+        for op, tag in (("write", "save"), ("read", "load")):
+            slots = _std_slots(op)
+            _, ctx, _, _ = cfg.op_params(op)
+            inflight = max(int(fanin), 1) * slots
+            depth = slots + cfg.degradation * max(0, inflight - ctx) \
+                / max(int(fanin), 1)
+            out[f"{tag}_queue_depth"] = float(depth)
+            out[f"{tag}_backlog_bytes"] = float(depth * _std_rpc_bytes(op))
+        return out
+
+    # ------------------------------------------------------------------
+    # multi-client simulation
+    # ------------------------------------------------------------------
+
+    def simulate(self, op: Op, n_clients: int, bytes_per_client: int, *,
+                 slots_per_client: Optional[int] = None,
+                 rpc_bytes: Optional[int] = None,
+                 engine: str = "vectorized",
+                 seed: int = 0) -> FabricTransferResult:
+        """Simulate all ``n_clients`` bursting ``bytes_per_client`` at t=0.
+
+        Both engines draw per-RPC lognormal jitter around the shared
+        effective service time at fanin ``n_clients``; they differ only in
+        the slot schedule (numpy wave balancing vs greedy min-heap), which
+        agree on duration to within the jitter noise floor.
+        """
+        if engine not in ("vectorized", "event"):
+            raise ValueError(f"unknown engine {engine!r}")
+        slots = slots_per_client if slots_per_client is not None \
+            else _std_slots(op)
+        size = rpc_bytes if rpc_bytes is not None else _std_rpc_bytes(op)
+        n_rpcs = max(int(np.ceil(bytes_per_client / size)), 1)
+        t_svc = self.service_time_s(op, n_clients, slots, size)
+        sigma = self.config.service_jitter
+
+        if engine == "vectorized":
+            rng = np.random.default_rng(seed)
+            durations, mean_wait, mean_service = _clients_vectorized(
+                rng, n_clients, n_rpcs, slots, t_svc, sigma)
+        else:
+            durations = np.empty(n_clients)
+            waits = np.empty(n_clients)
+            services = np.empty(n_clients)
+            for c in range(n_clients):
+                rng = np.random.default_rng((seed, c))
+                d, w, s = _client_event(rng, n_rpcs, slots, t_svc, sigma)
+                durations[c], waits[c], services[c] = d, w, s
+            mean_wait = float(waits.mean())
+            mean_service = float(services.mean())
+
+        return FabricTransferResult(
+            op=op, n_clients=n_clients, bytes_per_client=bytes_per_client,
+            n_rpcs_per_client=n_rpcs, engine=engine,
+            duration_s=float(durations.max()),
+            per_client_duration_s=durations,
+            mean_slot_wait_s=mean_wait,
+            mean_service_s=mean_service,
+            ceiling_bytes_s=self.ceiling_bytes_s(op, n_clients))
+
+    # convenience views -------------------------------------------------
+
+    def replace(self, **kw) -> "StorageFabric":
+        return StorageFabric(dataclasses.replace(self.config, **kw))
+
+
+def _draw_services(rng, n_rpcs: int, t_svc: float, sigma: float) -> np.ndarray:
+    if sigma <= 0:
+        return np.full(n_rpcs, t_svc)
+    return t_svc * rng.lognormal(mean=0.0, sigma=sigma, size=n_rpcs)
+
+
+def _clients_vectorized(rng, n_clients, n_rpcs, slots, t_svc, sigma):
+    """Wave-balanced slot schedule for ALL clients as array ops.
+
+    Per wave, the next ``slots`` RPCs of every client go to that client's
+    least-loaded slots ((n_clients, slots) argsort + take, one numpy pass
+    per wave instead of one Python heap op per RPC).  Greedy min-heap
+    scheduling hands each RPC to the globally least-loaded slot; pairing
+    a whole wave against the load-sorted slot vector keeps the per-slot
+    load spread bounded by a single service time, so the makespan matches
+    the event reference to O(t_svc) — a ~1/waves relative error.
+    """
+    loads = np.zeros((n_clients, slots))
+    wait_sum = np.zeros(n_clients)
+    svc_sum = 0.0
+    remaining = n_rpcs
+    while remaining > 0:
+        k = min(slots, remaining)
+        remaining -= k
+        svc = _draw_services(rng, n_clients * k, t_svc, sigma) \
+            .reshape(n_clients, k)
+        # LPT pairing: largest service onto the least-loaded slot keeps the
+        # per-slot load spread compressed to <= one service time, matching
+        # the greedy heap's continuously-rebalanced schedule
+        svc = -np.sort(-svc, axis=1)
+        order = np.argsort(loads, axis=1)[:, :k]     # least-loaded slots
+        starts = np.take_along_axis(loads, order, axis=1)
+        wait_sum += starts.sum(axis=1)               # arrival t=0: wait=start
+        np.put_along_axis(loads, order, starts + svc, axis=1)
+        svc_sum += float(svc.sum())
+    durations = loads.max(axis=1)
+    return durations, float(wait_sum.mean() / n_rpcs), \
+        svc_sum / (n_clients * n_rpcs)
+
+
+def _client_event(rng, n_rpcs, slots, t_svc, sigma):
+    """Discrete-event reference: greedy min-heap over slot free times."""
+    services = _draw_services(rng, n_rpcs, t_svc, sigma)
+    heap = [0.0] * slots
+    heapq.heapify(heap)
+    end = 0.0
+    wait_sum = 0.0
+    for i in range(n_rpcs):
+        t_slot = heapq.heappop(heap)
+        wait_sum += t_slot                  # arrival t=0
+        fin = t_slot + services[i]
+        heapq.heappush(heap, fin)
+        end = max(end, fin)
+    return float(end), wait_sum / n_rpcs, float(services.mean())

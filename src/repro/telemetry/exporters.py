@@ -26,6 +26,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.failures import FailureEvent
+from repro.storage.fabric import StorageFabric
 from repro.telemetry.registry import MetricMeta, MetricRegistry
 
 # The full production pipeline carries ~751 metric names, ~305 analysis-
@@ -51,6 +52,10 @@ CORE_METRICS = [
      "counter", "node"),
     ("node_mountstats_nfs_read_bytes_total", "counter", "node"),
     ("node_mountstats_nfs_write_bytes_total", "counter", "node"),
+    # storage-fabric F2 signals: RPC queue depth and transport backlog
+    # rise together during save/load bursts (paper §4.2.5)
+    ("node_mountstats_nfs_rpc_queue_depth", "gauge", "node"),
+    ("node_netstat_Tcp_transport_backlog_bytes", "gauge", "node"),
     ("node_network_transmit_bytes_total", "counter", "node"),
     ("node_network_receive_bytes_total", "counter", "node"),
     ("node_infiniband_port_data_transmitted_bytes_total", "counter", "node"),
@@ -132,9 +137,15 @@ class ExporterSuite:
     """Generates scrape ticks of all metrics for all nodes."""
 
     def __init__(self, n_nodes: int, seed: int = 0,
-                 n_pad: int = N_PAD_METRICS):
+                 n_pad: int = N_PAD_METRICS,
+                 storage_levels: Optional[Dict[str, float]] = None):
         self.n = n_nodes
         self.n_pad = n_pad
+        # characteristic RPC queue depth / transport backlog while a
+        # save/load is in flight, from the shared storage fabric at the
+        # campaign's gang fanin (paper-default fabric when not supplied)
+        self.storage_levels = storage_levels \
+            or StorageFabric().telemetry_levels(60)
         self.rng = np.random.default_rng(seed)
         self.reg = MetricRegistry(n_nodes)
         for name, kind, exp in CORE_METRICS:
@@ -211,6 +222,17 @@ class ExporterSuite:
             (1e6 + 4.2e9 * 30 * load + r.normal(0, 1e5, shape)).clip(0) * up
         v["node_mountstats_nfs_write_bytes_total"] = \
             (1e5 + 0.6e9 * 30 * ckpt + r.normal(0, 1e4, shape)).clip(0) * up
+        # fabric F2 signals: queue depth and backlog rise TOGETHER during
+        # save/load bursts; fail-slow nodes sit above their peers (slow >= 1)
+        lv = self.storage_levels
+        v["node_mountstats_nfs_rpc_queue_depth"] = \
+            ((2.0 + lv["save_queue_depth"] * ckpt
+              + lv["load_queue_depth"] * load
+              + r.exponential(1.0, shape)) * slow) * up
+        v["node_netstat_Tcp_transport_backlog_bytes"] = \
+            ((1e4 + lv["save_backlog_bytes"] * ckpt
+              + lv["load_backlog_bytes"] * load
+              + r.exponential(5e3, shape)) * slow) * up
         v["node_network_transmit_bytes_total"] = \
             (2e8 + r.normal(0, 1e7, shape)) * up
         v["node_network_receive_bytes_total"] = \

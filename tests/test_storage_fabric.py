@@ -1,0 +1,300 @@
+"""StorageFabric: the scale-emergent F2 bottleneck (acceptance criteria),
+engine parity, fabric-derived per-client/campaign/scenario integration,
+and the storage-anomaly telemetry vote."""
+import numpy as np
+import pytest
+
+from repro.storage import (FabricConfig, StorageFabric, STD_READ_SLOTS,
+                           STD_WRITE_SLOTS)
+
+
+# ---------------------------------------------------------------------------
+# the paper's F2 numbers, derived
+# ---------------------------------------------------------------------------
+
+def test_utilization_collapse_at_63_clients():
+    """Acceptance: 63-client aggregate utilization within +-5 points of the
+    paper's 21.5% (read) / 16.0% (write)."""
+    fab = StorageFabric()
+    assert fab.utilization("read", 63) == pytest.approx(0.215, abs=0.05)
+    assert fab.utilization("write", 63) == pytest.approx(0.160, abs=0.05)
+
+
+def test_small_scale_near_linear():
+    """Acceptance: 2-4-client runs achieve >=3x the 63-client utilization
+    fraction, and aggregate bandwidth scales ~linearly 2 -> 4."""
+    fab = StorageFabric()
+    for op in ("read", "write"):
+        u63 = fab.utilization(op, 63)
+        assert fab.utilization(op, 2) >= 3 * u63
+        assert fab.utilization(op, 4) >= 3 * u63
+        agg2 = 2 * fab.per_client_bandwidth_bytes_s(op, 2)
+        agg4 = 4 * fab.per_client_bandwidth_bytes_s(op, 4)
+        assert agg4 == pytest.approx(2 * agg2, rel=0.1)
+
+
+def test_table13_service_times_emerge():
+    """The paper's Table 13 per-RPC service times are the fabric's
+    effective values at the campaign fanins, not free constants."""
+    fab = StorageFabric()
+    read = fab.service_time_s("read", 60, STD_READ_SLOTS)
+    write = fab.service_time_s("write", 39, STD_WRITE_SLOTS)
+    assert read == pytest.approx(0.0273, rel=0.05)
+    assert write == pytest.approx(0.126, rel=0.05)
+
+
+def test_scaling_curve_shape():
+    fab = StorageFabric()
+    curve = fab.scaling_curve("read", (2, 4, 8, 16, 32, 63))
+    utils = [r["utilization"] for r in curve]
+    # monotone-nonincreasing utilization; big drop between 4 and 63 nodes
+    assert all(a >= b - 1e-12 for a, b in zip(utils, utils[1:]))
+    assert utils[1] > 3 * utils[-1]
+    # service time inflates with fanin
+    svcs = [r["service_ms"] for r in curve]
+    assert svcs[-1] > 5 * svcs[0]
+
+
+def test_degradation_scales_service_not_ceiling():
+    base = StorageFabric()
+    bad = StorageFabric(FabricConfig(degradation=4.0))
+    assert bad.service_time_s("write", 60) == pytest.approx(
+        4.0 * base.service_time_s("write", 60), rel=1e-6)
+    # the nominal server maxima (utilization denominators) are untouched
+    assert bad.ceiling_bytes_s("read", 63) == base.ceiling_bytes_s("read", 63)
+    assert bad.utilization("read", 63) < base.utilization("read", 63)
+
+
+def test_client_link_floor():
+    """A single unloaded client is bounded by its own link, never above."""
+    fab = StorageFabric()
+    for op in ("read", "write"):
+        bw = fab.per_client_bandwidth_bytes_s(op, 1)
+        assert bw <= fab.config.client_link_bw * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# simulation engines
+# ---------------------------------------------------------------------------
+
+def test_vectorized_matches_event_reference():
+    """Acceptance: vectorized sim within 5% of the event-driven reference
+    on the 63-node load scenario (and on a write burst)."""
+    fab = StorageFabric()
+    vec = fab.simulate("read", 63, 2 << 30, engine="vectorized", seed=0)
+    ev = fab.simulate("read", 63, 2 << 30, engine="event", seed=0)
+    assert vec.duration_s == pytest.approx(ev.duration_s, rel=0.05)
+    assert vec.mean_service_s == pytest.approx(ev.mean_service_s, rel=0.05)
+
+    vecw = fab.simulate("write", 16, 4 << 30, engine="vectorized", seed=1)
+    evw = fab.simulate("write", 16, 4 << 30, engine="event", seed=1)
+    assert vecw.duration_s == pytest.approx(evw.duration_s, rel=0.05)
+
+
+def test_simulation_matches_analytic_utilization():
+    fab = StorageFabric()
+    sim = fab.simulate("read", 63, 4 << 30, engine="vectorized", seed=2)
+    assert sim.utilization == pytest.approx(
+        fab.utilization("read", 63), rel=0.10)
+    assert sim.n_rpcs_per_client == (4 << 30) // (256 << 10)
+    assert len(sim.per_client_duration_s) == 63
+    assert sim.duration_s == sim.per_client_duration_s.max()
+
+
+def test_expected_duration_floor_for_sub_wave_transfers():
+    """A transfer smaller than one slot-table wave still costs at least a
+    full RPC service round — the analytic query must agree with the
+    simulation engines at small sizes too."""
+    fab = StorageFabric()
+    t_svc = fab.service_time_s("write", 60)
+    est = fab.expected_duration_s("write", 60, 16 << 20)   # 16 RPCs < slots
+    # pre-fix this returned n_rpcs/slots * t_svc ~ t_svc/8, physically
+    # impossible; the estimate is a mean, so the jittered makespan across
+    # 60 clients sits somewhat above it (extreme-value tail), never 8x
+    assert t_svc <= est < 2 * t_svc
+    sim = fab.simulate("write", 60, 16 << 20, engine="event", seed=0)
+    assert est <= sim.duration_s < 3 * est
+
+
+def test_simulate_deterministic_and_validates():
+    fab = StorageFabric()
+    a = fab.simulate("read", 8, 256 << 20, seed=5)
+    b = fab.simulate("read", 8, 256 << 20, seed=5)
+    assert a.duration_s == b.duration_s
+    with pytest.raises(ValueError, match="engine"):
+        fab.simulate("read", 4, 1 << 20, engine="gpu")
+    with pytest.raises(ValueError, match="unknown op"):
+        fab.service_time_s("append", 4)
+
+
+def test_telemetry_levels_rise_with_fanin_and_degradation():
+    fab = StorageFabric()
+    lo = fab.telemetry_levels(4)
+    hi = fab.telemetry_levels(60)
+    for k in ("save_queue_depth", "load_queue_depth",
+              "save_backlog_bytes", "load_backlog_bytes"):
+        assert hi[k] >= lo[k] > 0
+    # a degraded server holds requests in queue longer: the exported
+    # levels must deviate from a healthy campaign's
+    bad = StorageFabric(FabricConfig(degradation=4.0)).telemetry_levels(60)
+    assert bad["save_queue_depth"] > 2 * hi["save_queue_depth"]
+    assert bad["load_backlog_bytes"] > 2 * hi["load_backlog_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# per-client view (checkpoint/storage.py)
+# ---------------------------------------------------------------------------
+
+def test_nfs_client_service_times_derived_from_fabric():
+    from repro.checkpoint.storage import NFSClientSim, NFSConfig
+
+    sim = NFSClientSim(seed=0)
+    # defaults resolve to the fabric's Table-13-effective values
+    assert sim.config.read_service_s == pytest.approx(0.0273, rel=0.05)
+    assert sim.config.write_service_s == pytest.approx(0.126, rel=0.05)
+    # explicit values (degraded scenarios) bypass the derivation
+    pinned = NFSClientSim(NFSConfig(write_service_s=0.5, read_service_s=0.1))
+    assert pinned.config.write_service_s == 0.5
+    # a degraded fabric propagates into the per-client view
+    slow = NFSClientSim(fabric=StorageFabric(FabricConfig(degradation=2.0)))
+    assert slow.config.write_service_s == pytest.approx(
+        2 * sim.config.write_service_s, rel=1e-6)
+
+
+def test_checkpoint_load_does_not_mutate_shared_config():
+    """The nconnect=2 load path must be a per-call override: a concurrent
+    save from the manager's flush thread reads the same config."""
+    from repro.checkpoint.storage import NFSClientSim
+
+    sim = NFSClientSim(seed=0)
+    before = sim.config
+    res = sim.checkpoint_load(bytes_per_node=1 << 30)
+    assert sim.config is before            # literally untouched
+    assert sim.config.n_connections == 1
+    assert res.n_rpcs == (1 << 30) // (256 << 10)
+
+
+def test_transfer_accepts_raw_config_override():
+    """A per-call config built from scratch (service times unresolved)
+    must resolve against the fabric, not crash on None."""
+    from repro.checkpoint.storage import NFSClientSim, NFSConfig
+
+    sim = NFSClientSim(seed=0)
+    res = sim.transfer("write", 8 << 20, config=NFSConfig(n_slots=256))
+    assert res.n_rpcs == 8
+    assert res.duration_s > 0
+
+
+# ---------------------------------------------------------------------------
+# campaign + scenario integration
+# ---------------------------------------------------------------------------
+
+def test_campaign_derives_checkpoint_timing_from_fabric():
+    from repro.core.cluster import CampaignConfig, ClusterSim
+
+    sim = ClusterSim(CampaignConfig(duration_h=24.0, seed=0,
+                                    storage=FabricConfig()))
+    # gang-fanin fabric queries land near the paper's observed constants
+    assert 10.0 < sim.cfg.checkpoint_save_s < 25.0        # paper 18-31.7 s
+    assert sim.cfg.loading_time_h == pytest.approx(31.0 / 60.0, rel=0.05)
+    assert sim.cfg.loading_cold_h == pytest.approx(58.0 / 60.0, rel=0.05)
+    res = sim.run()
+    assert res.duration_h == 24.0
+
+
+def test_campaign_fabric_telemetry_exports_storage_series():
+    from repro.core.cluster import CampaignConfig, ClusterSim
+
+    res = ClusterSim(CampaignConfig(duration_h=12.0, seed=3, telemetry=True,
+                                    telemetry_pad_metrics=4,
+                                    storage=FabricConfig())).run()
+    names = res.store.names
+    assert "node_mountstats_nfs_rpc_queue_depth" in names
+    assert "node_netstat_Tcp_transport_backlog_bytes" in names
+    q = res.store.series("node_mountstats_nfs_rpc_queue_depth")
+    b = res.store.series("node_netstat_Tcp_transport_backlog_bytes")
+    # queueing and transport backlog rise TOGETHER during save bursts
+    # (paper F2): ticks where queue depth spikes see backlog spike too
+    spikes = q > 100.0
+    if spikes.any():
+        assert (b[spikes] > 1e7).mean() > 0.9
+
+
+def test_scenario_storage_fabric_resolution():
+    from repro.ops import Scenario, get_scenario
+
+    sc = get_scenario("storage-fabric")
+    rt = Scenario.from_dict(sc.to_dict())
+    assert rt == sc
+    cfg = sc.to_campaign_config(seed=1)
+    assert cfg.storage is not None
+    # fabric-derived save duration: the ckpt_pack bf16 wire volume (10 GiB)
+    # bursting from 60 writers
+    assert sc.resolve_delta_s() == pytest.approx(
+        sc.fabric().expected_duration_s("write", 60, 10 << 30))
+    deg = get_scenario("storage-fabric-degraded")
+    assert deg.resolve_delta_s() > 2 * sc.resolve_delta_s()
+
+
+def test_storage_slots_lever_works_in_fabric_mode():
+    """The F2 'doubling slots' lever must reach the fabric queries, not
+    just the legacy per-client path."""
+    from repro.core.cluster import ClusterSim
+    from repro.ops import get_scenario
+
+    sc = get_scenario("storage-fabric")
+    wide = sc.replace(storage_slots=256)
+    # at 60-writer fanin the server is contended: more slots per client
+    # deepens the queue, so the save does NOT speed up linearly — but the
+    # timing must respond to the knob
+    assert wide.resolve_delta_s() != sc.resolve_delta_s()
+    cs = ClusterSim(sc.to_campaign_config(0))
+    cw = ClusterSim(wide.to_campaign_config(0))
+    assert cw.cfg.checkpoint_save_s == pytest.approx(
+        wide.resolve_delta_s(), rel=1e-6)
+    assert cw.cfg.checkpoint_save_s != cs.cfg.checkpoint_save_s
+
+
+def test_sweep_reports_f2_for_fabric_scenarios():
+    from repro.ops import SweepRunner, get_scenario
+
+    scs = [get_scenario("storage-fabric").replace(duration_days=2.0)]
+    res = SweepRunner(scs, seeds=(0,), executor="serial").run()
+    agg = res.aggregate()["storage-fabric"]
+    assert agg["f2_load_util"] == pytest.approx(0.215, abs=0.05)
+    assert agg["f2_save_util"] == pytest.approx(0.160, abs=0.05)
+    md = res.to_markdown()
+    assert "F2 storage fabric" in md
+    assert "21.5" in md
+
+
+# ---------------------------------------------------------------------------
+# detector votes on storage anomalies
+# ---------------------------------------------------------------------------
+
+def test_precursor_detector_votes_on_storage_metrics():
+    """A node whose RPC queue depth and transport backlog deviate from the
+    peer cohort alarms through the standard multi-signal vote."""
+    from repro.core.precursor import DetectorConfig, PrecursorDetector
+    from repro.telemetry.registry import TimeSeriesStore
+
+    n_nodes, n_ticks, bad = 8, 12, 3
+    store = TimeSeriesStore(n_nodes)
+    rng = np.random.default_rng(0)
+    for t in range(n_ticks):
+        util = np.full(n_nodes, 95.0) + rng.normal(0, 0.3, n_nodes)
+        q = 2.0 + rng.normal(0, 0.1, n_nodes)
+        b = 1e4 + rng.normal(0, 300.0, n_nodes)
+        if t >= 6:
+            q[bad] = 250.0                  # fabric-level queueing
+            b[bad] = 2.6e8                  # transport backlog, together
+        store.append(t * 30.0 / 3600.0, {
+            "DCGM_FI_DEV_GPU_UTIL": util,
+            "node_mountstats_nfs_rpc_queue_depth": q,
+            "node_netstat_Tcp_transport_backlog_bytes": b,
+        })
+    det = PrecursorDetector(DetectorConfig(min_signals=2))
+    alarms = det.scan(store)
+    assert any(a.node == bad for a in alarms)
+    top = {m for a in alarms if a.node == bad for m, _ in a.top_metrics}
+    assert "node_mountstats_nfs_rpc_queue_depth" in top
