@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, timed
+from benchmarks.common import timed
 
 
 def bench_flash_attention() -> list:

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import FAST, Row, timed, fmt
+from benchmarks.common import FAST, timed
 
 
 # ---------------------------------------------------------------------------
@@ -37,7 +37,6 @@ def bench_taxonomy() -> list:
 
     (counts, total), us = timed(run)
     shares = {k: 100 * v / total for k, v in sorted(counts.items())}
-    nv = shares.get("NVLink errors", 0)
     derived = (f"events_per_55d={total/40:.1f} (paper 17) | "
                + " ".join(f"{k}={v:.1f}%" for k, v in shares.items())
                + f" | paper: NVLink 29.4% ECC 11.8% dropout 11.8% "
@@ -195,12 +194,91 @@ def bench_storage_fabric() -> list:
 
 
 # ---------------------------------------------------------------------------
+# control plane: streaming detection vs rescan-per-span, and the
+# proactive-vs-reactive goodput ledger
+# ---------------------------------------------------------------------------
+
+def bench_control_plane() -> list:
+    from repro.control import ControlConfig, StreamingDetector
+    from repro.core.cluster import CampaignConfig, ClusterSim
+    from repro.core.precursor import DetectorConfig, PrecursorDetector
+    from repro.telemetry.registry import TimeSeriesStore
+
+    hours = 12.0 if FAST else 24.0
+    res = ClusterSim(CampaignConfig(duration_h=hours, telemetry=True,
+                                    telemetry_pad_metrics=16,
+                                    seed=11)).run()
+    store = res.store
+    ts = store.times()
+    arrays = {name: store.series(name) for name in store.names}
+    T = len(ts)
+    span = 60                               # 30 min control interval
+    spans = [(a, min(a + span, T)) for a in range(0, T, span)]
+
+    # online streaming: one incremental pass per span
+    def run_stream():
+        det = StreamingDetector(DetectorConfig())
+        out = []
+        for a, b in spans:
+            out += det.push(ts[a:b],
+                            {k: v[a:b] for k, v in arrays.items()})
+        return out
+
+    stream_alarms, us_stream = timed(run_stream)
+
+    # naive online deployment of the offline detector: rescan the growing
+    # store at every span (what running `scan` per tick/span costs)
+    det = PrecursorDetector(DetectorConfig())
+
+    def run_rescan():
+        out = []
+        for _, b in spans:
+            prefix = TimeSeriesStore(store.n_nodes)
+            prefix.append_batch(ts[:b],
+                                {k: v[:b] for k, v in arrays.items()})
+            out = det.scan(prefix)
+        return out
+
+    rescan_alarms, us_rescan = timed(run_rescan)
+    parity = stream_alarms == rescan_alarms
+    rows = [("control_plane_streaming", us_stream,
+             f"{len(spans)} spans x {span} ticks (T={T}): "
+             f"stream={us_stream/1e6:.2f}s rescan={us_rescan/1e6:.2f}s "
+             f"speedup=x{us_rescan/us_stream:.1f} parity={parity} "
+             f"alarms={len(stream_alarms)} (target >=10x, exact parity)")]
+
+    # proactive vs reactive on identical failure schedules (seeds chosen
+    # so the window contains pre-XID precursor events — the case the
+    # control plane exists for; FP-only windows cost ~seconds of saves)
+    days = 7.0 if FAST else 21.0
+    seeds = (25,) if FAST else (7, 25)
+    d_goodput = avoided = urgent = 0.0
+    total_us = 0.0
+    for seed in seeds:
+        pro, us = timed(lambda s=seed: ClusterSim(CampaignConfig(
+            duration_h=days * 24.0, telemetry_pad_metrics=0,
+            telemetry_store=False, control=ControlConfig(drain=False),
+            seed=s)).run())
+        total_us += us
+        rea = ClusterSim(CampaignConfig(duration_h=days * 24.0,
+                                        seed=seed)).run()
+        d_goodput += pro.goodput_h() - rea.goodput_h()
+        avoided += pro.control.lost_work_avoided_h
+        urgent += pro.control.urgent_save_h
+    rows.append(("control_plane_goodput", total_us,
+                 f"{len(seeds)} x {days:.0f}d proactive-vs-reactive: "
+                 f"goodput {d_goodput/len(seeds):+.2f} h/campaign "
+                 f"(lost-work avoided {avoided/len(seeds):.2f} h, urgent "
+                 f"saves {urgent/len(seeds):.2f} h)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Tables 10/11: Young/Daly interval optimisation
 # ---------------------------------------------------------------------------
 
 def bench_youngdaly() -> list:
-    from repro.checkpoint.youngdaly import (mc_cost_fraction, phase_table,
-                                            t_opt_s, cost_fraction)
+    from repro.checkpoint.youngdaly import mc_cost_fraction, phase_table
 
     table, us = timed(phase_table)
     rows = []
@@ -413,4 +491,5 @@ def all_benches():
     return [bench_taxonomy, bench_storage_fabric, bench_youngdaly,
             bench_rpc, bench_ckpt_path, bench_io_sharding,
             bench_data_pipeline, bench_exclusion, bench_retry,
-            bench_precursor, bench_cluster_engine, bench_scenario_sweep]
+            bench_precursor, bench_control_plane, bench_cluster_engine,
+            bench_scenario_sweep]

@@ -1,0 +1,93 @@
+"""CI benchmark regression gate.
+
+    python -m benchmarks.check_regression CURRENT.json BASELINE.json \
+        [--factor 2.0]
+
+Compares the ``us_per_call`` of every benchmark row present in BOTH files
+(the ``--json`` output of ``benchmarks.run``) and fails when any current
+timing exceeds ``factor`` x its baseline.  Rows with missing or
+non-positive timings (derived-only rows, errored benches) are skipped;
+benches new since the baseline are reported but do not fail the gate —
+regenerate the baseline to start tracking them:
+
+    REPRO_BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run \
+        --only cluster_engine --only storage_fabric --only control_plane \
+        --json benchmarks/baselines/ci_baseline.json
+
+The committed baseline (`benchmarks/baselines/ci_baseline.json`) seeds the
+BENCH_* perf trajectory: the 2x headroom absorbs runner-to-runner noise
+while still catching the order-of-magnitude regressions that matter (a
+batched path silently degrading to its per-tick reference).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for row in doc.get("rows", []):
+        us = row.get("us_per_call")
+        if isinstance(us, (int, float)) and us > 0:
+            out[row["name"]] = float(us)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh benchmarks.run --json output")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="fail when current > factor x baseline")
+    ap.add_argument("--min-us", type=float, default=1000.0,
+                    help="ignore rows whose baseline is below this "
+                         "(microsecond rows are timer noise on shared "
+                         "runners)")
+    args = ap.parse_args()
+
+    cur = load_rows(args.current)
+    base = load_rows(args.baseline)
+    skipped = sorted(name for name in set(cur) & set(base)
+                     if base[name] < args.min_us)
+    shared = sorted(name for name in set(cur) & set(base)
+                    if base[name] >= args.min_us)
+    new = sorted(set(cur) - set(base))
+    gone = sorted(set(base) - set(cur))
+
+    failures = []
+    print(f"{'benchmark':<34} {'baseline':>12} {'current':>12} {'ratio':>7}")
+    for name in shared:
+        ratio = cur[name] / base[name]
+        flag = " <-- REGRESSION" if ratio > args.factor else ""
+        print(f"{name:<34} {base[name]:>10.0f}us {cur[name]:>10.0f}us "
+              f"{ratio:>6.2f}x{flag}")
+        if ratio > args.factor:
+            failures.append((name, ratio))
+    for name in skipped:
+        print(f"{name:<34} {base[name]:>10.0f}us {cur[name]:>10.0f}us "
+              f"  (below --min-us, not gated)")
+    for name in new:
+        print(f"{name:<34} {'(new)':>12} {cur[name]:>10.0f}us       -")
+    for name in gone:
+        print(f"{name:<34} {base[name]:>10.0f}us {'(missing)':>12}       -")
+
+    if not shared:
+        print("error: no overlapping benchmark rows between current and "
+              "baseline", file=sys.stderr)
+        sys.exit(2)
+    if failures:
+        worst = max(failures, key=lambda kv: kv[1])
+        print(f"\nFAIL: {len(failures)} benchmark(s) regressed more than "
+              f"{args.factor:.1f}x (worst: {worst[0]} at {worst[1]:.2f}x)",
+              file=sys.stderr)
+        sys.exit(1)
+    print(f"\nOK: {len(shared)} benchmarks within {args.factor:.1f}x of "
+          f"baseline")
+
+
+if __name__ == "__main__":
+    main()

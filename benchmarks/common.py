@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import os
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Tuple
 
 Row = Tuple[str, float, str]   # (name, us_per_call, derived)
 

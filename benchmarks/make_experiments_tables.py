@@ -12,7 +12,7 @@ RESULTS = Path(__file__).resolve().parent / "results"
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from benchmarks.roofline import model_flops  # noqa: E402
-from repro.configs import SHAPES, ASSIGNED_ARCHS, get_config  # noqa: E402
+from repro.configs import SHAPES, ASSIGNED_ARCHS  # noqa: E402
 
 ARCHS = ASSIGNED_ARCHS + ["paper-solar-102b"]
 

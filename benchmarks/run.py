@@ -1,24 +1,29 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only substr] [--json path]
+    PYTHONPATH=src python -m benchmarks.run [--only substr]... [--json path]
 
-Prints ``name,us_per_call,derived`` CSV; ``--json`` additionally writes the
-rows as a JSON document (the CI artifact).  Set REPRO_BENCH_FAST=1 for the
-abbreviated suite (CI).  The roofline table (from the dry-run artifacts) is
-appended when benchmarks/results/dryrun_baseline.json exists.
+``--only`` is repeatable; a bench runs when ANY given substring matches its
+name (CI: ``--only cluster_engine --only storage_fabric --only
+control_plane``).  Prints ``name,us_per_call,derived`` CSV; ``--json``
+additionally writes the rows as a JSON document (the CI artifact, which
+``benchmarks.check_regression`` gates against the committed baseline).  Set
+REPRO_BENCH_FAST=1 for the abbreviated suite (CI).  The roofline table
+(from the dry-run artifacts) is appended when
+benchmarks/results/dryrun_baseline.json exists.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
-import time
 import traceback
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", action="append", default=None,
+                    help="run benches whose name contains this substring; "
+                         "repeatable (any match runs the bench)")
     ap.add_argument("--json", default=None,
                     help="also write rows as JSON to this path")
     args = ap.parse_args()
@@ -31,7 +36,7 @@ def main() -> None:
     failures = 0
     rows = []
     for bench in benches:
-        if args.only and args.only not in bench.__name__:
+        if args.only and not any(o in bench.__name__ for o in args.only):
             continue
         try:
             for name, us, derived in bench():

@@ -37,17 +37,29 @@ def main():
                     choices=("process", "thread", "serial"))
     ap.add_argument("--report", default=None,
                     help="also write the full markdown report here")
+    ap.add_argument("--preset", default=None,
+                    help="proactive-vs-reactive quickstart: sweep the "
+                         "reactive baseline against PRESET (e.g. "
+                         "'proactive' or 'proactive-aggressive') on "
+                         "identical seeds; defaults --days to 14 and skips "
+                         "the F1 sub-campaign")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny deterministic CI sweep: paper-faithful + "
-                         "storage-fabric, 1 seed, 3 days, serial, no F1")
+                         "storage-fabric + proactive, 1 seed, 3 days, "
+                         "serial, no F1")
     args = ap.parse_args()
 
     if args.smoke:
-        args.scenarios = "paper-faithful,storage-fabric"
+        args.scenarios = "paper-faithful,storage-fabric,proactive"
         args.seeds = "0"
         args.days = 3.0
         args.telemetry_days = 0.0
         args.executor = "serial"
+    elif args.preset:
+        args.scenarios = f"reactive,{args.preset}"
+        if args.days is None:
+            args.days = 14.0
+        args.telemetry_days = 0.0
 
     names = list_scenarios() if args.scenarios == "all" \
         else [s.strip() for s in args.scenarios.split(",") if s.strip()]

@@ -11,7 +11,7 @@ not a multiple of the period (e.g. gemma3's 62 = 10*6 + 2).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax.numpy as jnp

@@ -1,0 +1,232 @@
+"""Detection→recovery policy engine — closing the paper's title arc.
+
+The reactive baseline (`ClusterSim` without a control plane) only reacts
+to XID failures after they fire; the F1 detector's alarms change nothing.
+`ControlPlane` embeds the streaming detector in the event engine and maps
+its alarms to recovery actions, in the proactive-operations direction of
+Kokolis et al. (2024) and the L4 diagnosis→mitigation pipeline:
+
+* **urgent checkpoint** — an alarm on a node inside the running gang
+  triggers an immediate save, priced at the gang's fanin through the same
+  `checkpoint_save_s` the shared-NFS `StorageFabric` resolves for regular
+  saves.  True positives shrink the lost-work window at the next failure;
+  false positives burn save time.  Both sides are accounted.
+* **predictive drain** — a *confirmed* alarm gracefully terminates the
+  session behind a final checkpoint and isolates the suspect node before
+  the failure lands, so the gang re-forms from spares instead of crashing
+  into a retry chain.  Confirmation is alarm clustering, not vote size:
+  real precursors flap (tens of alarms on one node inside half an hour as
+  the degradation ramps) while false positives arrive as isolated shots —
+  requiring ``drain_confirm_alarms`` same-node alarms inside
+  ``drain_confirm_window_h`` separates them cleanly where a per-alarm
+  signal count cannot (TP and FP alarms both carry ~4-5 votes).  Drains
+  need a spare in the pool (a degraded-pool drain would starve the gang)
+  and feed the `ExclusionTracker` with a ``"predictive drain"`` reason —
+  F3 concentration then *emerges from detector behaviour* instead of
+  being injected.  A false-positive drain is re-checked healthy and
+  readmitted after ``drain_recheck_h``.
+* **alarm-informed retry placement** — gang allocations for retries avoid
+  recently-alarmed nodes (`RetryEngine.placement_order`), while the
+  all-or-nothing gang requirement still wins when the pool is tight.
+
+Counterfactual accounting: the campaign keeps two checkpoint clocks — the
+scheduled cadence (`last_ckpt`) and the effective latest save
+(`last_save`, advanced by urgent saves) — so every failure records both
+the actual lost work and what the reactive baseline would have lost.
+`ControlStats.summarize` turns that into the goodput ledger the sweep
+report prints: lost-work hours avoided per true positive, urgent-save
+hours wasted per false positive.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+from repro.core.precursor import Alarm, DetectorConfig, evaluate
+from repro.core.session import SessionState
+from repro.control.streaming import StreamingDetector
+
+
+@dataclass(frozen=True)
+class ControlConfig:
+    """Policy knobs for the online detection→recovery loop."""
+    detector: DetectorConfig = DetectorConfig()
+    # urgent checkpoint on any in-gang alarm
+    urgent_checkpoint: bool = True
+    urgent_cooldown_h: float = 0.5        # min spacing between urgent saves
+    # predictive drain on confirmed (clustered) alarms
+    drain: bool = False
+    drain_confirm_alarms: int = 3         # same-node alarms that confirm
+    drain_confirm_window_h: float = 0.5   # ...inside this window
+    drain_redeploy_h: float = 5.0 / 60.0  # graceful handoff before restart
+    drain_recheck_h: float = 4.0          # FP drains readmitted after this
+    # alarm-informed retry placement
+    retry_avoid_alarmed: bool = True
+    alarm_memory_h: float = 4.0           # how long an alarm taints a node
+    # control interval: max scrape ticks the engine may emit before the
+    # detector sees them (bounds alarm->action latency; 120 ticks = 1 h)
+    reaction_ticks: int = 120
+
+
+@dataclass
+class UrgentSave:
+    time_h: float
+    node: int
+    alarm_idx: int                        # index into ControlStats.alarms
+    cost_h: float
+
+
+@dataclass
+class DrainAction:
+    time_h: float
+    node: int
+    alarm_idx: int
+    executed: bool                        # False: state changed before drain
+
+
+@dataclass
+class ControlStats:
+    """Everything the control plane did, plus the counterfactual ledger."""
+    alarms: List[Alarm] = field(default_factory=list)
+    urgent_saves: List[UrgentSave] = field(default_factory=list)
+    drains: List[DrainAction] = field(default_factory=list)
+    urgent_save_h: float = 0.0            # total save time spent on alarms
+    lost_work_avoided_h: float = 0.0      # vs the scheduled-cadence clock
+    failures_on_drained_node: int = 0     # disruptions a drain dodged
+
+    @property
+    def n_drains(self) -> int:
+        return sum(1 for d in self.drains if d.executed)
+
+    def summarize(self, failures, duration_h: float) -> Dict[str, float]:
+        """Score the campaign's alarms against its ground-truth failure
+        schedule and split the spend/savings by true vs false positive."""
+        xid_fails = [f for f in failures if f.kind == "xid"]
+        ev = evaluate(self.alarms, xid_fails, duration_h)
+        wasted_h = sum(s.cost_h for s in self.urgent_saves
+                       if s.alarm_idx not in ev.matched_alarm_ids)
+        tp = ev.detected
+        fp = ev.false_positives
+        return {
+            "n_alarms": float(len(self.alarms)),
+            "tp": float(tp),
+            "fp": float(fp),
+            "fp_per_day": ev.fp_per_day,
+            "n_urgent_saves": float(len(self.urgent_saves)),
+            "urgent_save_h": self.urgent_save_h,
+            "urgent_wasted_h": wasted_h,
+            "wasted_per_fp_h": wasted_h / max(fp, 1),
+            "lost_work_avoided_h": self.lost_work_avoided_h,
+            "avoided_per_tp_h": self.lost_work_avoided_h / max(tp, 1),
+            "n_drains": float(self.n_drains),
+            "failures_avoided": float(self.failures_on_drained_node),
+        }
+
+
+class ControlPlane:
+    """Online controller embedded in the event engine.
+
+    The telemetry batcher feeds every emitted span chunk to
+    :meth:`on_chunk`; alarms are applied as follows:
+
+    * urgent checkpoints are pure accounting at the alarm's own timestamp
+      (the save would have completed well inside the span; it does not
+      change the span's constant-state evolution), so they apply
+      retroactively within the chunk;
+    * drains DO change cluster state, so the chunk that raised a
+      drain-grade alarm halts further emission and the drain becomes a
+      first-class event the main loop processes at the chunk boundary —
+      reaction latency is bounded by ``reaction_ticks``.
+    """
+
+    def __init__(self, config: ControlConfig, urgent_save_s: float):
+        self.cfg = config
+        self.urgent_save_s = urgent_save_s
+        self.detector = StreamingDetector(config.detector)
+        self.stats = ControlStats()
+        self.last_alarm_h: Dict[int, float] = {}
+        self.pending_drain: Optional[DrainAction] = None
+        self._last_urgent_h = -1e18
+        self._node_alarms: Dict[int, List[float]] = {}   # confirmation ring
+
+    # -- telemetry-side hook (called by _TelemetryBatcher) -------------------
+
+    def on_chunk(self, ts, snap, state) -> bool:
+        """Scan one emitted span chunk; apply in-span actions.
+
+        Returns True when emission must halt so a pending drain can run as
+        an event at the chunk boundary.
+        """
+        cfg = self.cfg
+        halt = False
+        for alarm in self.detector.push(ts, snap):
+            idx = len(self.stats.alarms)
+            self.stats.alarms.append(alarm)
+            self.last_alarm_h[alarm.node] = alarm.time_h
+            cur = state.current
+            in_gang = (cur is not None
+                       and cur.state is SessionState.RUNNING
+                       and alarm.node in cur.nodes)
+            if not in_gang:
+                continue
+            if cfg.urgent_checkpoint and alarm.time_h - self._last_urgent_h \
+                    >= cfg.urgent_cooldown_h:
+                self._urgent_save(alarm.time_h, alarm.node, idx, state)
+            if cfg.drain and self.pending_drain is None \
+                    and self._confirmed(alarm):
+                self.pending_drain = DrainAction(alarm.time_h, alarm.node,
+                                                 idx, executed=False)
+                halt = True
+        return halt
+
+    def _confirmed(self, alarm: Alarm) -> bool:
+        """Alarm-clustering confirmation: real precursors flap (many alarms
+        on one node as the degradation ramps); false positives do not."""
+        cfg = self.cfg
+        ring = self._node_alarms.setdefault(alarm.node, [])
+        ring.append(alarm.time_h)
+        cutoff = alarm.time_h - cfg.drain_confirm_window_h
+        ring[:] = [t for t in ring if t >= cutoff]
+        return len(ring) >= cfg.drain_confirm_alarms
+
+    def _urgent_save(self, t: float, node: int, alarm_idx: int, state):
+        cost_h = self.urgent_save_s / 3600.0
+        state.last_save = max(state.last_save, t)
+        self.stats.urgent_saves.append(UrgentSave(t, node, alarm_idx, cost_h))
+        self.stats.urgent_save_h += cost_h
+        self._last_urgent_h = t
+
+    # -- event-side hooks (called by the main loop) --------------------------
+
+    def process(self, t: float, state):
+        """Execute a pending drain at the chunk boundary that raised it."""
+        if self.pending_drain is None:
+            return
+        act = self.pending_drain
+        self.pending_drain = None
+        cur = state.current
+        spares = sum(1 for nd in state.sched.nodes if nd.free)
+        if (cur is None or cur.state is not SessionState.RUNNING
+                or act.node not in cur.nodes
+                or not state.sched.nodes[act.node].healthy
+                or spares < 1):
+            # stale (state moved on) or unsafe (no spare: draining would
+            # starve the gang and stall the campaign on the re-allocation)
+            self.stats.drains.append(act)
+            return
+        # final save behind the drain (the handoff is checkpointed)
+        if state.last_save < t:
+            self._urgent_save(t, act.node, act.alarm_idx, state)
+        state.drain_session(t, act.node,
+                            redeploy_h=self.cfg.drain_redeploy_h,
+                            recheck_h=self.cfg.drain_recheck_h)
+        self.stats.drains.append(DrainAction(t, act.node, act.alarm_idx,
+                                             executed=True))
+
+    def avoid_nodes(self, t: float) -> Optional[Set[int]]:
+        """Nodes a retry allocation should place last (recent alarms)."""
+        if not self.cfg.retry_avoid_alarmed:
+            return None
+        cutoff = t - self.cfg.alarm_memory_h
+        avoid = {n for n, th in self.last_alarm_h.items() if th >= cutoff}
+        return avoid or None

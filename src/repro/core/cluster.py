@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.checkpoint.youngdaly import MTBF_H_PAPER
+from repro.control.policy import ControlConfig, ControlPlane, ControlStats
 from repro.core.exclusion import ExclusionTracker
 from repro.storage.fabric import FabricConfig, StorageFabric
 from repro.core.failures import FailureEvent, FailureInjector
@@ -103,6 +104,13 @@ class CampaignConfig:
     kind_weights: Optional[Dict[str, float]] = None
     telemetry: bool = False
     telemetry_pad_metrics: Optional[int] = None   # None -> full 275-metric pad
+    telemetry_store: bool = True             # False: stream-and-discard (the
+                                             #   control plane consumes spans
+                                             #   online; nothing is retained)
+    # online detection->recovery control plane (event engine only).  Setting
+    # this implies telemetry generation even when ``telemetry`` is False —
+    # the streaming detector consumes the emitted spans.
+    control: Optional[ControlConfig] = None
     engine: str = "event"                    # "event" | "tick"
     seed: int = 0
 
@@ -118,11 +126,30 @@ class CampaignResult:
     checkpoint_events: int
     lost_hours: List[float]
     duration_h: float
+    checkpoint_save_s: float = 18.0          # resolved save cost (fabric-
+                                             #   priced when storage is set)
+    control: Optional[ControlStats] = None   # detection->recovery ledger
 
     def training_occupancy(self) -> float:
         run = sum(s.elapsed_running_h(self.duration_h) for s in self.sessions
                   if s.n_nodes > 1)
         return min(run / self.duration_h, 1.0)
+
+    def goodput_h(self) -> float:
+        """Productive training hours: RUNNING wall time minus redone (lost)
+        work minus checkpoint-save overhead (scheduled + urgent).  This is
+        the quantity the proactive control plane trades on: urgent saves
+        spend save time to shrink the lost-work window; drains spend a
+        controlled restart to dodge a crash."""
+        run = sum(s.elapsed_running_h(self.duration_h) for s in self.sessions
+                  if s.n_nodes > 1)
+        ckpt_h = self.checkpoint_events * self.checkpoint_save_s / 3600.0
+        urgent_h = self.control.urgent_save_h if self.control else 0.0
+        return run - float(np.sum(self.lost_hours)) - ckpt_h - urgent_h
+
+    def goodput(self) -> float:
+        """Goodput as a fraction of the campaign wall clock."""
+        return max(self.goodput_h(), 0.0) / self.duration_h
 
     def retry_chains(self) -> List[Chain]:
         """Chains with at least one retry (the paper's unit of analysis)."""
@@ -158,10 +185,17 @@ class _CampaignState:
         self.structural_until = -1.0             # root cause fixed then
         self.pending_start: Optional[float] = 0.0  # next attempt start time
         self.start_is_manual = True              # operator-initiated attempt
+        # two checkpoint clocks: ``last_ckpt`` is the scheduled cadence;
+        # ``last_save`` is the effective latest save (urgent control-plane
+        # saves advance it past the cadence).  Without a control plane the
+        # two are always equal.
         self.last_ckpt = 0.0
+        self.last_save = 0.0
         self.down_since: Optional[float] = None
         self.down_is_auto = True
+        self.down_kind = "failure"               # "failure" | "drain"
         self.last_fail_hardware = False
+        self.control: Optional[ControlPlane] = None
 
     # -- attempt lifecycle --------------------------------------------------
 
@@ -169,7 +203,11 @@ class _CampaignState:
         cfg, rng = self.cfg, self.rng
         s = Session(task_name=self.chain.task_name, n_nodes=cfg.job_nodes,
                     created_h=t)
-        if not self.sched.try_allocate(s, t):
+        # alarm-informed placement: retries prefer nodes without a recent
+        # alarm (the gang requirement still wins when the pool is tight)
+        avoid = self.control.avoid_nodes(t) if self.control is not None \
+            else None
+        if not self.sched.try_allocate(s, t, avoid=avoid):
             # gang unmet: operators readmit a deliberately-isolated node
             # under pressure if it is healthy (paper: the license case took
             # hours) — only fail-slow isolations qualify; hardware-down
@@ -292,12 +330,15 @@ class _CampaignState:
                 self.current.transition(SessionState.RUNNING, t)
                 self.chain.attempts[-1].reached_training = True
                 self.last_ckpt = t
+                self.last_save = t
                 if self.down_since is not None:
                     self.downtimes.append({"t": t,
                                            "hours": t - self.down_since,
-                                           "auto": self.down_is_auto})
+                                           "auto": self.down_is_auto,
+                                           "kind": self.down_kind})
                     self.down_since = None
                     self.down_is_auto = True
+                    self.down_kind = "failure"
 
     def account_checkpoints(self, t: float):
         """Catch up checkpoint bookkeeping for a RUNNING span ending at
@@ -312,6 +353,7 @@ class _CampaignState:
             self.ckpt_events += k
             self.current.checkpoint_step += k
             self.last_ckpt += k * cfg.checkpoint_interval_h
+            self.last_save = max(self.last_save, self.last_ckpt)
 
     def process_failure(self, t: float, ev: FailureEvent):
         cfg, rng = self.cfg, self.rng
@@ -320,16 +362,29 @@ class _CampaignState:
             self.sched.exclude(ev.node, t, "fail-slow (deliberate isolation)")
             self.repair_until[ev.node] = t + cfg.slow_isolation_h
             return
+        # a failure landing on a predictively-drained node cannot take the
+        # gang down — that is the drain paying off
+        if self.control is not None \
+                and self.isolated.get(ev.node) == "predictive drain":
+            self.control.stats.failures_on_drained_node += 1
         if ev.is_hardware:
             self.sched.mark_down(ev.node, t, f"xid={ev.xid}"
                                  if ev.xid else "unreachable")
             self.repair_until[ev.node] = t + cfg.repair_time_h
-            self.isolated[ev.node] = "hardware failure"
+            # a node already isolated (fail-slow, predictive drain) keeps
+            # the reason that took it out of the pool — that is the
+            # exclusion mechanism F3 attributes the interval to
+            self.isolated.setdefault(ev.node, "hardware failure")
         if self.current is not None and not self.current.is_terminal \
                 and ev.node in self.current.nodes:
             if self.current.state is SessionState.RUNNING:
-                self.lost_hours.append(min(t - self.last_ckpt,
-                                           cfg.checkpoint_interval_h))
+                lost = min(t - self.last_save, cfg.checkpoint_interval_h)
+                self.lost_hours.append(lost)
+                if self.control is not None:
+                    baseline = min(t - self.last_ckpt,
+                                   cfg.checkpoint_interval_h)
+                    self.control.stats.lost_work_avoided_h += \
+                        max(baseline - lost, 0.0)
             # software-level follow-on? (NCCL wedged after the event)
             if rng.random() < cfg.p_software_failure:
                 self.structural_until = max(
@@ -337,6 +392,36 @@ class _CampaignState:
                     t + rng.exponential(cfg.structural_fix_mean_h))
             self.fail_session(t, ev.kind, xid=ev.xid)
             self.schedule_next(t, xid=ev.xid)
+
+    def drain_session(self, t: float, node: int, *, redeploy_h: float,
+                      recheck_h: float):
+        """Predictive drain (control plane): gracefully stop the session
+        behind its final checkpoint, isolate ``node`` pending a health
+        recheck, and redeploy the gang from the remaining pool.  Not a
+        failure: the chain closes with a drain reason and the next chain
+        starts automatically after the controlled handoff."""
+        s = self.current
+        att = self.chain.attempts[-1]
+        att.end_h = t
+        att.failure_kind = "drain"
+        s.transition(SessionState.TERMINATING, t)
+        s.transition(SessionState.TERMINATED, t)
+        self.sched.release(s, t)
+        self.exclusions.record_session(s.created_h, t, s.nodes,
+                                       dict(self.isolated))
+        self.current = None
+        self.isolated[node] = "predictive drain"
+        self.sched.exclude(node, t, "predictive drain (control plane)")
+        self.repair_until[node] = t + recheck_h
+        self.chain.stopped_reason = "predictive drain"
+        self.version += 1
+        self.chain = Chain(task_name=f"b200_v{self.version}")
+        self.chains.append(self.chain)
+        self.pending_start = t + redeploy_h
+        self.start_is_manual = False
+        self.last_fail_hardware = False          # controlled: warm restart
+        self.down_since = t
+        self.down_kind = "drain"
 
     def finalize(self, failures, store) -> CampaignResult:
         cfg = self.cfg
@@ -351,7 +436,9 @@ class _CampaignState:
             sessions=self.sessions, chains=self.chains, failures=failures,
             exclusions=self.exclusions, store=store,
             downtimes=self.downtimes, checkpoint_events=self.ckpt_events,
-            lost_hours=self.lost_hours, duration_h=cfg.duration_h)
+            lost_hours=self.lost_hours, duration_h=cfg.duration_h,
+            checkpoint_save_s=cfg.checkpoint_save_s,
+            control=self.control.stats if self.control is not None else None)
 
 
 class _TelemetryBatcher:
@@ -359,16 +446,27 @@ class _TelemetryBatcher:
 
     Keeps an integer cursor over the global 30 s scrape grid; ``emit``
     generates every tick in [span start, span end) with one batched
-    exporter call per <=``_MAX_SPAN_TICKS`` chunk.  Failure signatures are
+    exporter call per <=``max_chunk`` chunk.  Failure signatures are
     pinned to the first grid tick at/after the event time (matching the
     serial loop, which applied them on the tick that processed the event).
+
+    When a control plane is attached (``consumer``) every chunk is handed
+    to it right after generation; a drain-grade alarm halts emission at
+    that chunk's boundary so the drain can run as a first-class event
+    (``max_chunk`` is then the control plane's reaction interval).
+    ``store`` may be None for stream-and-discard campaigns — online
+    consumers don't need day-scale telemetry retained in memory.
     """
 
     def __init__(self, cfg: CampaignConfig, exporters: ExporterSuite,
-                 store: TimeSeriesStore):
+                 store: Optional[TimeSeriesStore],
+                 consumer: Optional[ControlPlane] = None,
+                 max_chunk: int = _MAX_SPAN_TICKS):
         self.cfg = cfg
         self.exporters = exporters
         self.store = store
+        self.consumer = consumer
+        self.max_chunk = max_chunk
         self.n_ticks_total = int(np.ceil(cfg.duration_h / TICK_H - 1e-9))
         self.next_k = 0                       # next un-emitted grid tick
         self.pending_sigs: List[Tuple[int, FailureEvent]] = []
@@ -378,13 +476,17 @@ class _TelemetryBatcher:
         if k < self.n_ticks_total:
             self.pending_sigs.append((k, ev))
 
-    def emit(self, t_end: float, state: _CampaignState):
+    def emit(self, t_end: float, state: _CampaignState) -> Optional[float]:
         """Emit all grid ticks with time < ``t_end`` (campaign state is
-        constant over the span except checkpoint-save flags)."""
+        constant over the span except checkpoint-save flags).
+
+        Returns the early-stop time when the attached control plane
+        demands an action (the main loop truncates the span there), else
+        None."""
         cfg = self.cfg
         k_end = min(int(np.ceil(t_end / TICK_H - 1e-9)), self.n_ticks_total)
         if k_end <= self.next_k:
-            return
+            return None
         n = cfg.n_nodes
         down_row = np.array([not nd.healthy for nd in state.sched.nodes],
                             dtype=float)
@@ -401,7 +503,7 @@ class _TelemetryBatcher:
 
         while self.next_k < k_end:
             k0 = self.next_k
-            k1 = min(k0 + _MAX_SPAN_TICKS, k_end)
+            k1 = min(k0 + self.max_chunk, k_end)
             ts = np.arange(k0, k1) * TICK_H
             T = len(ts)
             if running:
@@ -420,8 +522,13 @@ class _TelemetryBatcher:
             self.pending_sigs = [(k, ev) for k, ev in self.pending_sigs
                                  if k >= k1]
             snap = self.exporters.tick_batch(ts, batch, rows)
-            self.store.append_batch(ts, snap)
+            if self.store is not None:
+                self.store.append_batch(ts, snap)
             self.next_k = k1
+            if self.consumer is not None \
+                    and self.consumer.on_chunk(ts, snap, state):
+                return float(k1) * TICK_H
+        return None
 
 
 class ClusterSim:
@@ -461,7 +568,9 @@ class ClusterSim:
 
     def _make_telemetry(self, failures):
         cfg = self.cfg
-        if not cfg.telemetry:
+        # a control plane implies telemetry: the streaming detector is fed
+        # by the emitted spans even when nothing is retained
+        if not cfg.telemetry and cfg.control is None:
             return None, None
         n_pad = N_PAD_METRICS if cfg.telemetry_pad_metrics is None \
             else cfg.telemetry_pad_metrics
@@ -471,7 +580,11 @@ class ClusterSim:
         exporters = ExporterSuite(
             cfg.n_nodes, seed=cfg.seed, n_pad=n_pad,
             storage_levels=fabric.telemetry_levels(cfg.job_nodes))
-        store = TimeSeriesStore(cfg.n_nodes)
+        # retention needs BOTH flags: a control-only campaign (telemetry
+        # False) streams spans to the detector and discards them — holding
+        # a 73-day full-registry store would be tens of GB nobody asked for
+        store = TimeSeriesStore(cfg.n_nodes) \
+            if cfg.telemetry and cfg.telemetry_store else None
         for ev in failures:
             if ev.precursor_lead_h > 0:
                 exporters.begin_gradual_precursor(
@@ -496,13 +609,29 @@ class ClusterSim:
         failures = self._make_injector().sample(cfg.duration_h)
         fail_idx = 0
         exporters, store = self._make_telemetry(failures)
-        tel = _TelemetryBatcher(cfg, exporters, store) if exporters else None
+        ctl = None
+        if cfg.control is not None:
+            # urgent saves are priced like regular ones: fabric-resolved at
+            # the gang fanin when CampaignConfig.storage is set
+            ctl = ControlPlane(cfg.control,
+                               urgent_save_s=cfg.checkpoint_save_s)
+            st.control = ctl
+        # only drains need a bounded alarm->action latency (they truncate
+        # spans); urgent checkpoints apply retroactively at the alarm's own
+        # timestamp, so drain-less control runs keep full-size spans
+        max_chunk = min(_MAX_SPAN_TICKS, cfg.control.reaction_ticks) \
+            if ctl is not None and cfg.control.drain else _MAX_SPAN_TICKS
+        tel = _TelemetryBatcher(cfg, exporters, store, consumer=ctl,
+                                max_chunk=max_chunk) if exporters else None
 
         t = 0.0
         while True:
             # ---- process everything due at t (same order as the serial
-            # loop: repairs, pending start, session progress, failures) ----
+            # loop: repairs, control actions, pending start, session
+            # progress, failures) ----
             st.process_repairs(t)
+            if ctl is not None:
+                ctl.process(t, st)
             st.process_pending_start(t)
             st.process_prepare_done(t)
             while fail_idx < len(failures) \
@@ -529,9 +658,12 @@ class ClusterSim:
             t_next = min(t_next, cfg.duration_h)
 
             # ---- emit the constant-state telemetry span, then catch up
-            # checkpoint bookkeeping to the span end ----
+            # checkpoint bookkeeping to the span end; the control plane
+            # may truncate the span when a drain-grade alarm fires ----
             if tel is not None:
-                tel.emit(t_next, st)
+                t_stop = tel.emit(t_next, st)
+                if t_stop is not None and t_stop < t_next:
+                    t_next = t_stop
             st.account_checkpoints(t_next)
             if t_next >= cfg.duration_h:
                 break
@@ -545,6 +677,10 @@ class ClusterSim:
 
     def _run_tick(self) -> CampaignResult:
         cfg = self.cfg
+        if cfg.control is not None:
+            raise ValueError(
+                "the control plane consumes span-batched telemetry and is "
+                "only supported by the event engine (engine='event')")
         st = _CampaignState(cfg, self.rng)
         failures = self._make_injector().sample(cfg.duration_h)
         fail_iter = iter(failures)
@@ -561,6 +697,7 @@ class ClusterSim:
                     and t - st.last_ckpt >= cfg.checkpoint_interval_h:
                 st.ckpt_events += 1
                 st.last_ckpt = t
+                st.last_save = t
                 st.current.checkpoint_step += 1
 
             fired: List[FailureEvent] = []
@@ -570,7 +707,7 @@ class ClusterSim:
             for ev in fired:
                 st.process_failure(t, ev)
 
-            if exporters is not None:
+            if exporters is not None and store is not None:
                 cur = st.current
                 states = []
                 for i in range(cfg.n_nodes):

@@ -13,7 +13,7 @@ and computes the concentration statistics of Fig 11-13.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import numpy as np
 
@@ -72,6 +72,22 @@ class ExclusionTracker:
         if total == 0:
             return 0.0
         return float(np.sort(c)[::-1][:k].sum() / total)
+
+    def by_reason(self) -> Dict[str, dict]:
+        """Exclusion events grouped by reason — separates the injected
+        mechanisms (fail-slow isolation, hardware down, not-selected) from
+        detector-driven ones ("predictive drain"), so control-plane
+        campaigns can show F3 concentration *emerging* from alarms."""
+        out: Dict[str, dict] = {}
+        for iv in self.intervals:
+            g = out.setdefault(iv.reason, {"count": 0, "hours": 0.0,
+                                           "nodes": set()})
+            g["count"] += 1
+            g["hours"] += iv.hours
+            g["nodes"].add(iv.node)
+        return {reason: {"count": g["count"], "hours": g["hours"],
+                         "nodes": sorted(g["nodes"])}
+                for reason, g in out.items()}
 
     def deliberate_overlap(self) -> Dict[int, float]:
         """Per node: fraction of exclusion hours that were deliberate."""

@@ -14,11 +14,11 @@ consistently dominant*, which is why the vote is across the whole metric set.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.telemetry.registry import SCRAPE_INTERVAL_S, TimeSeriesStore
+from repro.telemetry.registry import TimeSeriesStore
 
 
 @dataclass(frozen=True)
@@ -62,55 +62,18 @@ class PrecursorDetector:
         self.config = config
 
     def scan(self, store: TimeSeriesStore) -> List[Alarm]:
-        """Run detection over a full telemetry store; returns alarms."""
-        cfg = self.config
-        names = [n for n in store.names if n not in cfg.exclude_metrics]
-        ticks = store.times()
-        n_ticks = len(ticks)
-        n_nodes = store.n_nodes
+        """Run detection over a full telemetry store; returns alarms.
 
-        # active cohort: node was running the workload at the PREVIOUS tick
-        # (so the failure tick itself — where it drops out — stays eligible)
-        if cfg.activity_metric in store.data:
-            util = store.series(cfg.activity_metric)
-            act_now = util > cfg.activity_threshold
-            active = np.vstack([act_now[:1], act_now[:-1]])
-        else:
-            active = np.ones((n_ticks, n_nodes), dtype=bool)
-
-        hit_count = np.zeros((n_ticks, n_nodes), dtype=np.int32)
-        top: List[List[List[Tuple[str, float]]]] = \
-            [[[] for _ in range(n_nodes)] for _ in range(n_ticks)]
-        for name in names:
-            series = store.series(name)               # (n_ticks, n_nodes)
-            masked = np.where(active, series, np.nan)
-            import warnings as _w
-            with np.errstate(all="ignore"), _w.catch_warnings():
-                _w.simplefilter("ignore", RuntimeWarning)
-                med = np.nanmedian(masked, axis=1, keepdims=True)
-                mad = np.nanmedian(np.abs(masked - med), axis=1, keepdims=True)
-            med = np.nan_to_num(med)
-            mad = np.nan_to_num(mad)
-            scale = 1.4826 * mad
-            floor = np.maximum(1e-12, 1e-6 * np.maximum(np.abs(med), 1.0))
-            scale = np.where(scale < 1e-12, floor, scale)
-            z = np.abs((series - med) / scale)
-            exceed = (z > cfg.z_threshold) & active
-            hit_count += exceed.astype(np.int32)
-            for t, node in zip(*np.nonzero(exceed)):
-                top[t][node].append((name, float(z[t, node])))
-
-        alarms: List[Alarm] = []
-        streak = np.zeros(n_nodes, dtype=np.int32)
-        for t in range(n_ticks):
-            over = hit_count[t] >= cfg.min_signals
-            streak = np.where(over, streak + 1, 0)
-            for node in np.nonzero(streak == cfg.persistence)[0]:
-                metrics = sorted(top[t][node], key=lambda kv: -kv[1])[:5]
-                alarms.append(Alarm(tick=t, time_h=ticks[t], node=int(node),
-                                    n_signals=int(hit_count[t, node]),
-                                    top_metrics=metrics))
-        return alarms
+        Delegates to the streaming core (`repro.control.streaming`) with a
+        single push of the whole store, so the offline and online paths
+        share one implementation: a chunked online feed of the same store
+        reproduces this alarm list exactly (see the control-plane parity
+        test).
+        """
+        from repro.control.streaming import StreamingDetector
+        det = StreamingDetector(self.config)
+        return det.push(store.times(),
+                        {name: store.series(name) for name in store.names})
 
 
 @dataclass
@@ -122,6 +85,10 @@ class EvalResult:
     fp_per_day: float
     detection_lead_h: List[float]
     per_failure: List[dict] = field(default_factory=list)
+    # indices (into the scored alarm sequence) that matched a failure —
+    # the control plane uses this to split urgent-checkpoint spend into
+    # justified (true positive) vs wasted (false positive)
+    matched_alarm_ids: set = field(default_factory=set)
 
     @property
     def detection_rate(self) -> float:
@@ -173,4 +140,5 @@ def evaluate(alarms: Sequence[Alarm], failures, duration_h: float,
     return EvalResult(
         n_failures=len(list(failures)), detected=detected, pre_xid=pre,
         false_positives=n_fp, fp_per_day=n_fp / max(duration_h / 24.0, 1e-9),
-        detection_lead_h=leads, per_failure=per_failure)
+        detection_lead_h=leads, per_failure=per_failure,
+        matched_alarm_ids=matched_alarm_ids)

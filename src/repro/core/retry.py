@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import List, Optional
+from typing import Collection, List, Optional, Sequence
 
 from repro.core.xid import XID_TABLE, Resolution
 
@@ -121,6 +121,16 @@ class RetryEngine:
     def is_structural(free_nodes: int, required: int) -> bool:
         """Gang requirement cannot be met — retrying is futile (§4.3.5)."""
         return free_nodes < required
+
+    @staticmethod
+    def placement_order(nodes: Sequence[int],
+                        avoid: Collection[int]) -> List[int]:
+        """Alarm-informed retry placement: order candidate nodes so that
+        recently-alarmed ones are chosen last.  The ordering is stable, so
+        the scheduler's own preference is preserved within each group, and
+        the gang requirement still wins — avoided nodes ARE used when the
+        pool is tight (a degraded gang beats no gang)."""
+        return sorted(nodes, key=lambda idx: idx in avoid)
 
 
 # ---------------------------------------------------------------------------

@@ -13,6 +13,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set
 
+from repro.core.retry import RetryEngine
 from repro.core.session import Session, SessionState
 
 
@@ -67,14 +68,23 @@ class GangScheduler:
 
     # -- gang allocation ----------------------------------------------------
 
-    def try_allocate(self, session: Session, t_h: float) -> bool:
-        """All-or-nothing: allocate session.n_nodes nodes or nothing."""
+    def try_allocate(self, session: Session, t_h: float,
+                     avoid: Optional[Set[int]] = None) -> bool:
+        """All-or-nothing: allocate session.n_nodes nodes or nothing.
+
+        ``avoid``: soft preference (alarm-informed retry placement) —
+        those nodes are picked last but still used when the gang cannot be
+        met without them."""
         free = self.free_nodes()
         if len(free) < session.n_nodes:
             self.log.append({"t": t_h, "event": "alloc_fail",
                              "session": session.session_id,
                              "want": session.n_nodes, "free": len(free)})
             return False
+        if avoid:
+            order = RetryEngine.placement_order([n.idx for n in free], avoid)
+            rank = {idx: pos for pos, idx in enumerate(order)}
+            free = sorted(free, key=lambda n: rank[n.idx])
         chosen = free[:session.n_nodes]
         for n in chosen:
             n.allocated_to = session.session_id

@@ -14,8 +14,8 @@ affected, 10.4% of GPU-hours wasted [Lin et al.] (paper §2.2).
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Deque, List
 
 import numpy as np
 

@@ -13,7 +13,6 @@ shared-file layout vs this one using the metadata-service model below.
 from __future__ import annotations
 
 import json
-import math
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Iterator, Optional

@@ -17,10 +17,9 @@ lowers.
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Row-parallel leaves: contraction (input) dim carries the model axis so the
@@ -110,7 +109,6 @@ class ShardingRules:
 
     def opt_shardings(self, opt_shapes, params_shapes):
         """Optimizer states mirror parameter sharding; scalars replicated."""
-        param_sh = self.params_shardings(params_shapes)
 
         def match(path, leaf):
             if len(leaf.shape) == 0:

@@ -10,8 +10,6 @@ Input is reshaped by ops.py to (n_blocks, block); grid = (n_blocks,).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

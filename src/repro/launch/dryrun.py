@@ -13,8 +13,7 @@ from pathlib import Path  # noqa: E402
 import jax           # noqa: E402
 
 from repro.configs import (  # noqa: E402
-    ASSIGNED_ARCHS, SHAPES, MAMBA, RWKV, all_configs, cell_is_runnable,
-    get_config)
+    ASSIGNED_ARCHS, SHAPES, MAMBA, RWKV, cell_is_runnable, get_config)
 from repro.distributed.hlo_analysis import (  # noqa: E402
     Roofline, collective_bytes, count_collective_ops)
 from repro.distributed.sharding import ShardingRules  # noqa: E402

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.launch.steps import make_serve_step
 from repro.models import model as model_mod
 from repro.models.model import RunOptions
 

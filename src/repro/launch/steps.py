@@ -2,13 +2,12 @@
 dry-run, and the real training driver."""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.base import ArchConfig
 from repro.models import model as model_mod
 from repro.models.model import RunOptions
 from repro.optim import AdamW

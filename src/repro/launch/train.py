@@ -19,20 +19,18 @@ import json
 import math
 import time
 from pathlib import Path
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.checkpoint.youngdaly import t_opt_s
 from repro.configs import get_config
 from repro.core.retry import (Attempt, Chain, RetryConfig, RetryEngine,
                               RetryPolicy, chain_stats)
 from repro.core.xid import XID_TABLE
 from repro.data.pipeline import DataConfig, synthetic_stream
-from repro.launch.steps import make_train_step, synthetic_batch
+from repro.launch.steps import make_train_step
 from repro.models import model as model_mod
 from repro.models.model import RunOptions
 from repro.optim import AdamW

@@ -18,7 +18,6 @@ queries to (B, S, n_kv, group, D).
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

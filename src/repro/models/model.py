@@ -7,9 +7,7 @@ heterogeneous structure of one period is unrolled inside the scanned body
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,9 +20,6 @@ Caveats (by design, documented):
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

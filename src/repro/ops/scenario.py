@@ -20,6 +20,7 @@ from typing import Dict, List, Optional
 
 from repro.checkpoint.storage import NFSClientSim, NFSConfig
 from repro.checkpoint.youngdaly import MTBF_H_PAPER, t_opt_s
+from repro.control.policy import ControlConfig
 from repro.core.cluster import CampaignConfig
 from repro.core.failures import FAILURE_CATEGORIES
 from repro.core.retry import RetryConfig, RetryPolicy
@@ -81,6 +82,17 @@ class Scenario:
     # behaviour at the true metric count); set lower to trade FP fidelity
     # for memory in wide sweeps
     telemetry_pad_metrics: Optional[int] = None
+
+    # -- detection->recovery control plane ----------------------------------
+    # when True the campaign runs the online control loop: the streaming
+    # detector consumes span-batched telemetry as it is emitted
+    # (stream-and-discard; nothing retained) and maps alarms to recovery
+    # actions.  The reactive baseline is simply control_plane=False.
+    control_plane: bool = False
+    control_urgent_checkpoint: bool = True   # in-gang alarm -> urgent save
+    control_drain: bool = False              # confirmed alarm -> drain node
+    control_drain_confirm_alarms: int = 3    # same-node alarms that confirm
+    control_alarm_memory_h: float = 4.0      # retry placement avoids alarmed
 
     # escape hatch: raw CampaignConfig field overrides applied last
     overrides: Dict[str, float] = field(default_factory=dict)
@@ -148,6 +160,15 @@ class Scenario:
                            policy=RetryPolicy(self.retry_policy),
                            structural_stop=self.structural_stop)
 
+    def control_config(self) -> Optional[ControlConfig]:
+        if not self.control_plane:
+            return None
+        return ControlConfig(
+            urgent_checkpoint=self.control_urgent_checkpoint,
+            drain=self.control_drain,
+            drain_confirm_alarms=self.control_drain_confirm_alarms,
+            alarm_memory_h=self.control_alarm_memory_h)
+
     def to_campaign_config(self, seed: int = 0) -> CampaignConfig:
         delta_s = self.resolve_delta_s()
         cfg = CampaignConfig(
@@ -180,6 +201,12 @@ class Scenario:
                 ckpt_bytes_per_node=self.ckpt_bytes_per_node or 20 << 30,
                 ckpt_wire_ratio=self.ckpt_wire_ratio,
                 restore_bytes_per_node=self.restore_bytes_per_node)
+        if self.control_plane:
+            # online loop: telemetry spans feed the streaming detector and
+            # are discarded (day-scale retention is an offline-F1 concern)
+            cfg = dataclasses.replace(
+                cfg, control=self.control_config(),
+                telemetry=True, telemetry_store=False)
         if self.overrides:
             cfg = dataclasses.replace(cfg, **self.overrides)
         return cfg
@@ -274,6 +301,31 @@ PRESETS: Dict[str, Scenario] = {s.name: s for s in [
         description="Checkpoint at the Young-Daly optimum for the 4K-phase "
                     "delta (44.9 min) instead of the observed 2.23 h.",
         checkpoint_strategy="young_daly"),
+    Scenario(
+        name="reactive",
+        description="Reactive baseline for the control-plane presets: the "
+                    "paper campaign where failures are handled only after "
+                    "they fire — the F1 detector changes nothing."),
+    Scenario(
+        name="proactive",
+        description="Online detection->recovery: the streaming detector "
+                    "consumes telemetry as emitted; in-gang alarms trigger "
+                    "urgent checkpoints (fabric-priced at gang fanin) and "
+                    "retries avoid recently-alarmed nodes.  Trajectory-"
+                    "preserving actions only: goodput gain is the lost-work "
+                    "window shrunk by true positives minus save time burned "
+                    "by false positives.",
+        control_plane=True),
+    Scenario(
+        name="proactive-aggressive",
+        description="Proactive plus predictive drains: alarms confirmed by "
+                    "clustering (3 same-node alarms in 30 min) gracefully "
+                    "checkpoint, drain, and replace the suspect node before "
+                    "the failure lands — the gang dodges the crash entirely "
+                    "at the price of a controlled restart (and the "
+                    "occasional false-positive drain).",
+        control_plane=True,
+        control_drain=True),
 ]}
 
 

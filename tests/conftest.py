@@ -1,6 +1,5 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the real single
 CPU device; only launch/dryrun.py forces the 512-device host platform."""
-import os
 import sys
 from pathlib import Path
 

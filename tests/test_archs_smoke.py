@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, all_configs, get_config
+from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.launch.steps import (make_serve_step, make_train_step,
                                 synthetic_batch, synthetic_decode_inputs)
 from repro.models import model as model_mod

@@ -1,7 +1,5 @@
 """Checkpoint subsystem: two-phase save semantics, roundtrip integrity,
 corruption detection, GC, and restart-from-checkpoint training equality."""
-import threading
-import time
 
 import jax
 import jax.numpy as jnp

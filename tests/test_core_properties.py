@@ -1,7 +1,6 @@
 """Hypothesis property tests on the system's invariants."""
 import math
 
-import numpy as np
 import pytest
 from _hypothesis_support import given, settings, st
 

@@ -74,7 +74,6 @@ def test_serving_loop():
 
 def test_cluster_campaign_invariants():
     from repro.core.cluster import CampaignConfig, ClusterSim
-    from repro.core.session import SessionState
 
     res = ClusterSim(CampaignConfig(duration_h=14 * 24.0, seed=4)).run()
     # every session is terminal and never exceeded the node budget

@@ -1,6 +1,5 @@
 """Per-kernel validation: shape/dtype sweeps vs the ref.py pure-jnp oracle
 (interpret=True executes the Pallas kernel body on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
