@@ -463,6 +463,96 @@ def bench_cluster_engine() -> list:
 
 
 # ---------------------------------------------------------------------------
+# seed-batched Monte Carlo campaign engine vs the ProcessPool per-seed path
+# ---------------------------------------------------------------------------
+
+def bench_mc_batch() -> list:
+    """256 seeds of the 63-node/73-day campaign: one stacked-numpy pass
+    (`BatchedCampaignEngine` via ``SweepRunner(mc_seeds=...)``) against the
+    per-seed ProcessPool path, with exact per-seed parity asserted both at
+    the findings level (all seeds) and field-for-field against direct
+    `ClusterSim` runs (a seed sample).  Parity failure or a collapse of
+    the batched path toward per-seed cost fails the bench (and CI)."""
+    from repro.core.batch import BatchedCampaignEngine
+    from repro.core.cluster import ClusterSim
+    from repro.ops import SweepRunner, get_scenario
+
+    sc = get_scenario("paper-faithful")
+    n_seeds = 256
+    BatchedCampaignEngine(sc.to_campaign_config(0)).run_findings([0])
+
+    # shared-runner noise swings both paths by 2-3x; take the best of 3
+    # for the cheap batched pass (the pool pass is too slow to repeat)
+    mc, us_mc = timed(lambda: SweepRunner([sc], mc_seeds=n_seeds).run())
+    for _ in range(2):
+        _, us2 = timed(lambda: SweepRunner([sc], mc_seeds=n_seeds).run())
+        us_mc = min(us_mc, us2)
+    pool, us_pool = timed(lambda: SweepRunner(
+        [sc], seeds=range(n_seeds), executor="process").run())
+
+    mismatches = []
+    for a, b in zip(mc.outcomes, pool.outcomes):
+        fa = {k: v for k, v in a.findings.items() if k != "wall_s"}
+        fb = {k: v for k, v in b.findings.items() if k != "wall_s"}
+        if a.seed != b.seed or fa != fb:
+            mismatches.append(a.seed)
+    if mismatches:
+        raise AssertionError(
+            f"mc/pool findings diverge on seeds {mismatches[:5]} "
+            f"({len(mismatches)}/{n_seeds})")
+
+    # field-for-field CampaignResult parity against the scalar engine
+    sample = [3] if FAST else [3, 11, 25]
+    results = BatchedCampaignEngine(sc.to_campaign_config(0)).run(sample)
+    for res, seed in zip(results, sample):
+        ref = ClusterSim(sc.to_campaign_config(seed)).run()
+        same = (
+            [(s.state, s.nodes, s.created_h, s.started_h, s.ended_h,
+              s.checkpoint_step, s.error, s.history)
+             for s in ref.sessions]
+            == [(s.state, s.nodes, s.created_h, s.started_h, s.ended_h,
+                 s.checkpoint_step, s.error, s.history)
+                for s in res.sessions]
+            and [c.attempts for c in ref.chains]
+            == [c.attempts for c in res.chains]
+            and ref.failures == res.failures
+            and ref.exclusions.intervals == res.exclusions.intervals
+            and ref.downtimes == res.downtimes
+            and ref.lost_hours == res.lost_hours
+            and ref.checkpoint_events == res.checkpoint_events)
+        if not same:
+            raise AssertionError(f"field-level parity broke at seed {seed}")
+
+    speedup = us_pool / us_mc
+    # backstop: the batched path silently degrading toward per-seed cost
+    # is the regression this group exists to catch (the floor is set for
+    # noisy 2-core shared runners; typical observed is x4-10)
+    if speedup < 2.5:
+        raise AssertionError(
+            f"mc_batch speedup collapsed to x{speedup:.1f} "
+            f"(mc={us_mc/1e6:.2f}s pool={us_pool/1e6:.2f}s)")
+
+    dist = mc.distribution()[sc.name]
+    g = dist["goodput"]
+    s4 = dist["f4_success_rate"]
+    rows = [
+        ("mc_batch_256seed", us_mc,
+         f"{n_seeds} seeds x 73d/63n: batched={us_mc/1e6:.2f}s "
+         f"pool={us_pool/1e6:.2f}s speedup=x{speedup:.1f} "
+         f"(issue target >=10x; >=2.5x gated) parity=exact "
+         f"({n_seeds} findings + {len(sample)} field-level seeds)"),
+        ("mc_batch_distribution", 0.0,
+         f"goodput% median={g['median']*100:.1f} "
+         f"iqr=[{g['q25']*100:.1f},{g['q75']*100:.1f}] "
+         f"ci95=[{g['ci_lo']*100:.1f},{g['ci_hi']*100:.1f}] | "
+         f"F4succ% median={s4['median']*100:.0f} "
+         f"ci95=[{s4['ci_lo']*100:.0f},{s4['ci_hi']*100:.0f}] "
+         f"(paper point estimates: occ 96.6, F4 33.3)"),
+    ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # scenario sweep throughput (the ops/ front door)
 # ---------------------------------------------------------------------------
 
@@ -492,4 +582,4 @@ def all_benches():
             bench_rpc, bench_ckpt_path, bench_io_sharding,
             bench_data_pipeline, bench_exclusion, bench_retry,
             bench_precursor, bench_control_plane, bench_cluster_engine,
-            bench_scenario_sweep]
+            bench_mc_batch, bench_scenario_sweep]

@@ -1,7 +1,7 @@
 """CI benchmark regression gate.
 
     python -m benchmarks.check_regression CURRENT.json BASELINE.json \
-        [--factor 2.0]
+        [--factor 2.0] [--require GROUP]...
 
 Compares the ``us_per_call`` of every benchmark row present in BOTH files
 (the ``--json`` output of ``benchmarks.run``) and fails when any current
@@ -11,8 +11,15 @@ benches new since the baseline are reported but do not fail the gate —
 regenerate the baseline to start tracking them:
 
     REPRO_BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run \
-        --only cluster_engine --only storage_fabric --only control_plane \
+        --only cluster_engine --only storage_fabric \
+        --only control_plane --only mc_batch \
         --json benchmarks/baselines/ci_baseline.json
+
+``--require GROUP`` (repeatable) declares a gated group: at least one row
+whose name contains GROUP must exist in BOTH files, otherwise the gate
+fails with exit 2 instead of silently passing.  Without it, a gated
+benchmark whose baseline entry was never committed (or whose bench was
+renamed away) would sail through as "new"/"missing" forever.
 
 The committed baseline (`benchmarks/baselines/ci_baseline.json`) seeds the
 BENCH_* perf trajectory: the 2x headroom absorbs runner-to-runner noise
@@ -47,10 +54,30 @@ def main() -> None:
                     help="ignore rows whose baseline is below this "
                          "(microsecond rows are timer noise on shared "
                          "runners)")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="GROUP",
+                    help="fail (exit 2) unless a row whose name contains "
+                         "GROUP exists in both files — a gated group "
+                         "missing its baseline entry must not silently "
+                         "pass; repeatable")
     args = ap.parse_args()
 
     cur = load_rows(args.current)
     base = load_rows(args.baseline)
+
+    missing_base = [g for g in args.require
+                    if not any(g in name for name in base)]
+    missing_cur = [g for g in args.require
+                   if not any(g in name for name in cur)]
+    if missing_base or missing_cur:
+        for g in missing_base:
+            print(f"error: required group {g!r} has no baseline row — "
+                  f"add it to {args.baseline}", file=sys.stderr)
+        for g in missing_cur:
+            print(f"error: required group {g!r} produced no current row "
+                  f"(bench renamed, filtered out, or errored?)",
+                  file=sys.stderr)
+        sys.exit(2)
     skipped = sorted(name for name in set(cur) & set(base)
                      if base[name] < args.min_us)
     shared = sorted(name for name in set(cur) & set(base)

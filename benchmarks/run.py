@@ -4,19 +4,37 @@
 
 ``--only`` is repeatable; a bench runs when ANY given substring matches its
 name (CI: ``--only cluster_engine --only storage_fabric --only
-control_plane``).  Prints ``name,us_per_call,derived`` CSV; ``--json``
-additionally writes the rows as a JSON document (the CI artifact, which
-``benchmarks.check_regression`` gates against the committed baseline).  Set
-REPRO_BENCH_FAST=1 for the abbreviated suite (CI).  The roofline table
-(from the dry-run artifacts) is appended when
-benchmarks/results/dryrun_baseline.json exists.
+control_plane --only mc_batch``).  Prints ``name,us_per_call,derived``
+CSV; ``--json`` additionally writes the rows as a JSON document (the CI
+artifact, which ``benchmarks.check_regression`` gates against the
+committed baseline) stamped with the git SHA and an ISO-8601 UTC
+timestamp, so the archived ``BENCH_*.json`` perf trajectory stays
+attributable across PRs.  Set REPRO_BENCH_FAST=1 for the abbreviated
+suite (CI).  The roofline table (from the dry-run artifacts) is appended
+when benchmarks/results/dryrun_baseline.json exists.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import traceback
+from datetime import datetime, timezone
+
+
+def git_sha() -> str:
+    """HEAD commit of the repo this benchmark file lives in ("unknown"
+    outside a git checkout — the payload is still valid)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)))
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 
 def main() -> None:
@@ -53,6 +71,9 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"fast": FAST, "only": args.only,
+                       "git_sha": git_sha(),
+                       "generated_at": datetime.now(
+                           timezone.utc).isoformat(timespec="seconds"),
                        "failures": failures, "rows": rows}, f, indent=2)
         print(f"json written to {args.json}", file=sys.stderr)
 

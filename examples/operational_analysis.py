@@ -9,6 +9,8 @@ chains — and prints them next to the paper's published numbers.
 """
 import argparse
 
+import numpy as np
+
 from repro.core.cluster import CampaignConfig, ClusterSim
 from repro.core.precursor import DetectorConfig, PrecursorDetector, evaluate
 from repro.core.retry import chain_stats

@@ -9,6 +9,14 @@ with two §4.3.5 retry improvements; ``--scenarios all`` sweeps every preset.
     PYTHONPATH=src python examples/scenario_sweep.py \
         --scenarios paper-faithful,flaky-fabric,storage-degraded \
         --seeds 0,1,2 --days 73 --telemetry-days 2 --report sweep.md
+
+Distributional (Monte Carlo) sweeps route hundreds of seeds through the
+seed-batched campaign engine in one stacked pass and add median/IQR/95%-CI
+columns to the report:
+
+    PYTHONPATH=src python examples/scenario_sweep.py \
+        --scenarios paper-faithful,smart-retry --mc-seeds 256 \
+        --report sweep_mc.md
 """
 import argparse
 
@@ -26,10 +34,11 @@ def main():
     ap.add_argument("--days", type=float, default=None,
                     help="override campaign length (default: per-scenario, "
                          "73 for the paper campaign)")
-    ap.add_argument("--telemetry-days", type=float, default=2.0,
+    ap.add_argument("--telemetry-days", type=float, default=None,
                     help="run an F1 precursor sub-campaign of this length "
                          "per (scenario, seed); longer windows tighten the "
-                         "F1 estimates; 0 skips F1 (fastest)")
+                         "F1 estimates; 0 skips F1 (fastest; default 2, "
+                         "or 0 in --mc-seeds mode)")
     ap.add_argument("--workers", type=int, default=None,
                     help="process-pool width (default: one per campaign, "
                          "capped at the core count)")
@@ -43,10 +52,18 @@ def main():
                          "'proactive' or 'proactive-aggressive') on "
                          "identical seeds; defaults --days to 14 and skips "
                          "the F1 sub-campaign")
+    ap.add_argument("--mc-seeds", type=int, default=None,
+                    help="Monte Carlo mode: run this many seeds per "
+                         "scenario through the seed-batched campaign "
+                         "engine (one stacked pass instead of one process "
+                         "per seed) and add median/IQR/95%%-CI columns to "
+                         "the report; overrides --seeds with range(N) and "
+                         "skips the per-seed F1 sub-campaign unless "
+                         "--telemetry-days is set explicitly")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny deterministic CI sweep: paper-faithful + "
                          "storage-fabric + proactive, 1 seed, 3 days, "
-                         "serial, no F1")
+                         "serial, no F1, plus an mc_seeds spot check")
     args = ap.parse_args()
 
     if args.smoke:
@@ -60,6 +77,8 @@ def main():
         if args.days is None:
             args.days = 14.0
         args.telemetry_days = 0.0
+    if args.telemetry_days is None:
+        args.telemetry_days = 0.0 if args.mc_seeds else 2.0
 
     names = list_scenarios() if args.scenarios == "all" \
         else [s.strip() for s in args.scenarios.split(",") if s.strip()]
@@ -73,15 +92,19 @@ def main():
         scenarios.append(sc)
     seeds = [int(s) for s in args.seeds.split(",")]
 
-    print(f"sweeping {len(scenarios)} scenarios x {len(seeds)} seeds "
-          f"({args.executor} executor)…")
+    n_seeds = args.mc_seeds if args.mc_seeds else len(seeds)
+    mode = "seed-batched Monte Carlo engine" if args.mc_seeds \
+        else f"{args.executor} executor"
+    print(f"sweeping {len(scenarios)} scenarios x {n_seeds} seeds "
+          f"({mode})…")
     for sc in scenarios:
         print(f"  - {sc.name}: {sc.duration_days:.0f} d, {sc.n_nodes} nodes"
               + (f", F1 window {sc.telemetry_days:.0f} d"
                  if sc.telemetry_days else ""))
 
     res = SweepRunner(scenarios, seeds=seeds, max_workers=args.workers,
-                      executor=args.executor).run()
+                      executor=args.executor,
+                      mc_seeds=args.mc_seeds).run()
 
     n = len(res.outcomes)
     print(f"\n{n} campaigns in {res.wall_s:.1f} s wall "
@@ -92,6 +115,20 @@ def main():
     if args.report:
         res.write(args.report)
         print(f"\nfull report written to {args.report}")
+
+    if args.smoke:
+        # Monte Carlo spot check: the batched engine's findings must be
+        # identical to the serial per-seed path on the same seeds
+        sc = get_scenario("paper-faithful").replace(duration_days=3.0)
+        mc = SweepRunner([sc], mc_seeds=4).run()
+        ref = SweepRunner([sc], seeds=range(4), executor="serial").run()
+        for a, b in zip(mc.outcomes, ref.outcomes):
+            fa = {k: v for k, v in a.findings.items() if k != "wall_s"}
+            fb = {k: v for k, v in b.findings.items() if k != "wall_s"}
+            assert a.seed == b.seed and fa == fb, \
+                f"mc/serial findings diverged at seed {a.seed}"
+        print("mc_seeds smoke: batched findings == per-seed findings (4 "
+              "seeds)")
 
 
 if __name__ == "__main__":

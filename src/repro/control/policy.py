@@ -157,9 +157,19 @@ class ControlPlane:
         Returns True when emission must halt so a pending drain can run as
         an event at the chunk boundary.
         """
+        return self.apply_alarms(self.detector.push(ts, snap), state)
+
+    def apply_alarms(self, alarms, state) -> bool:
+        """Map one chunk's alarms to in-span actions (urgent saves, drain
+        confirmation, placement memory).  Split from :meth:`on_chunk` so
+        the batched campaign engine can scan a whole seed group through
+        ``StreamingDetector.push_group`` and then apply each seed's alarms
+        against its own state view — the policy arithmetic is identical
+        either way.  Returns True when emission must halt for a drain.
+        """
         cfg = self.cfg
         halt = False
-        for alarm in self.detector.push(ts, snap):
+        for alarm in alarms:
             idx = len(self.stats.alarms)
             self.stats.alarms.append(alarm)
             self.last_alarm_h[alarm.node] = alarm.time_h

@@ -27,7 +27,7 @@ alarm list exactly.
 from __future__ import annotations
 
 import warnings
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -179,8 +179,17 @@ class StreamingDetector:
             self._tick_offset += T
             return []
 
-        # pass 2: attribution, restricted to the alarming ticks — recompute
-        # z on just those rows (row-sliced median/MAD is bit-identical)
+        alarms = self._attribute(ts, values, names, active, hit, rows, nodes)
+        self._tick_offset += T
+        self.n_alarms += len(alarms)
+        return alarms
+
+    def _attribute(self, ts, values, names, active, hit,
+                   rows, nodes) -> List[Alarm]:
+        """Pass 2: per-alarm metric attribution, restricted to the alarming
+        ticks — recompute z on just those rows (row-sliced median/MAD is
+        bit-identical)."""
+        cfg = self.config
         urows = np.unique(rows)
         pos = {int(r): i for i, r in enumerate(urows)}
         sub_active = active[urows]
@@ -200,6 +209,94 @@ class StreamingDetector:
                                 time_h=float(ts[r]), node=int(node),
                                 n_signals=int(hit[r, node]),
                                 top_metrics=metrics))
-        self._tick_offset += T
-        self.n_alarms += len(alarms)
         return alarms
+
+    # -- leading-seed-axis form (the batched campaign engine's path) ---------
+
+    @classmethod
+    def push_group(cls, detectors: "Sequence[StreamingDetector]",
+                   ts_list: Sequence[np.ndarray],
+                   values_list: Sequence[Dict[str, np.ndarray]],
+                   ) -> List[List[Alarm]]:
+        """Push S same-shape spans through S detectors in one stacked pass.
+
+        ``values_list[i]`` is detector ``i``'s span (metric -> (T, n)); all
+        spans must share (T, n) and the metric vocabulary — their tick
+        *times* may differ (the z math never reads ``ts``; per-seed times
+        only label the alarms).  Metrics are stacked to (S, B, T, n) blocks
+        for pass 1, so a group of seeds costs one set of numpy calls
+        instead of S.  Every per-element operation is independent of the
+        stacking (`robust_peer_z_block` broadcasts over leading axes and
+        selects medians row-wise), so each detector's alarms, carry state
+        (activity row, streak) and tick offset advance bit-identically to
+        S scalar ``push`` calls — the batched campaign engine's parity
+        contract leans on exactly this.
+        """
+        S = len(detectors)
+        if S == 1:
+            return [detectors[0].push(ts_list[0], values_list[0])]
+        cfg = detectors[0].config
+        if any(d.config is not cfg and d.config != cfg for d in detectors):
+            raise ValueError("push_group requires a shared DetectorConfig")
+        names = [n for n in values_list[0] if n not in cfg.exclude_metrics]
+        if len(ts_list[0]) == 0 or not names:
+            return [d.push(t, v) for d, t, v in
+                    zip(detectors, ts_list, values_list)]
+        T, n = np.asarray(values_list[0][names[0]]).shape
+
+        # activity with per-detector carry, stacked to (S, T, n)
+        if cfg.activity_metric in values_list[0]:
+            act_now = np.stack(
+                [np.asarray(v[cfg.activity_metric]) > cfg.activity_threshold
+                 for v in values_list])
+            prev = np.stack(
+                [d._prev_act if d._prev_act is not None else act_now[i, :1]
+                 for i, d in enumerate(detectors)])
+            active = np.concatenate([prev, act_now[:, :-1]], axis=1)
+            for i, d in enumerate(detectors):
+                d._prev_act = act_now[i, -1:].copy()
+        else:
+            active = np.ones((S, T, n), dtype=bool)
+            for d in detectors:
+                d._prev_act = active[0, -1:].copy()
+
+        # pass 1 on (S, B, T, n) blocks; same per-seed dtype grouping and
+        # block budget as the scalar path (the grouping never changes the
+        # per-metric math, only how many numpy calls it takes)
+        hit = np.zeros((S, T, n), dtype=np.int32)
+        by_dtype: Dict[np.dtype, List[str]] = {}
+        for name in names:
+            by_dtype.setdefault(np.asarray(values_list[0][name]).dtype,
+                                []).append(name)
+        block_n = max(_BLOCK_ELEMS // max(T * n, 1), 1)
+        act_b = active[:, None]                   # (S, 1, T, n)
+        for group in by_dtype.values():
+            for i in range(0, len(group), block_n):
+                block = np.stack(
+                    [[np.asarray(v[name]) for name in group[i:i + block_n]]
+                     for v in values_list])       # (S, B, T, n)
+                z = robust_peer_z_block(block, act_b)
+                hit += ((z > cfg.z_threshold) & act_b).sum(
+                    axis=1, dtype=np.int32)
+
+        # streak with per-detector carry, vectorized over the seed axis
+        over = hit >= cfg.min_signals
+        carry = np.stack(
+            [d._streak if d._streak is not None
+             else np.zeros(n, dtype=np.int64) for d in detectors])
+        idx = np.arange(1, T + 1, dtype=np.int64)[None, :, None]
+        last_reset = np.maximum.accumulate(np.where(over, 0, idx), axis=1)
+        streak = np.where(over, idx - last_reset, 0)
+        streak += np.where(over & (last_reset == 0), carry[:, None, :], 0)
+
+        out: List[List[Alarm]] = []
+        for i, d in enumerate(detectors):
+            d._streak = streak[i, -1].copy()
+            rows, nodes = np.nonzero(streak[i] == cfg.persistence)
+            alarms = [] if len(rows) == 0 else d._attribute(
+                ts_list[i], values_list[i], names, active[i], hit[i],
+                rows, nodes)
+            d._tick_offset += T
+            d.n_alarms += len(alarms)
+            out.append(alarms)
+        return out

@@ -10,8 +10,8 @@ Paper evidence (Tables 2, 9-11):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -77,49 +77,97 @@ class FailureInjector:
     kind_weights: Optional[Dict[str, float]] = None
 
     def node_hazard(self) -> np.ndarray:
-        rng = np.random.default_rng(self.seed + 1)
+        return self.node_hazard_for(self.seed)
+
+    def sample(self, duration_h: float) -> List[FailureEvent]:
+        """Sample this injector's schedule (one seed).  Delegates to the
+        batched drawer so the per-seed and campaign-batched paths share one
+        implementation — `sample_batch(d, [seed]).events(0)` is the
+        definition, not an approximation."""
+        return self.sample_batch(duration_h, [self.seed]).events(0)
+
+    def node_hazard_for(self, seed: int) -> np.ndarray:
+        """`node_hazard` for an explicit seed (the batch drawer's form)."""
+        rng = np.random.default_rng(seed + 1)
         n_hot = max(int(round(self.n_nodes * self.hot_fraction)), 1)
         hot = rng.choice(self.n_nodes, size=n_hot, replace=False)
-        w = np.full(self.n_nodes, (1 - self.hot_weight) / (self.n_nodes - n_hot))
+        w = np.full(self.n_nodes,
+                    (1 - self.hot_weight) / (self.n_nodes - n_hot))
         w[hot] = self.hot_weight / n_hot
         return w
 
-    def sample(self, duration_h: float) -> List[FailureEvent]:
-        """Vectorized schedule draw: exponential inter-failure gaps, skewed
-        node choice, and mix assignment all in block numpy operations."""
-        rng = np.random.default_rng(self.seed)
-        hazard = self.node_hazard()
+    def sample_batch(self, duration_h: float,
+                     seeds: Sequence[int]) -> "FailureBatch":
+        """Draw S independent failure schedules as one stacked structure.
+
+        Every seed consumes its own ``default_rng(seed)`` stream with the
+        exact call sequence of the historical scalar ``sample`` (gap blocks,
+        node choice, mix assignment, precursor/slow draws), so column ``i``
+        is bit-identical to ``FailureInjector(seed=seeds[i]).sample(...)``.
+        The mix tables, category lookup arrays and hazard shaping are
+        computed once and shared across seeds; per-event python objects are
+        only materialized on demand (``events(i)``)."""
         kinds, probs = self._mix()
+        kind_is_xid = np.array([k[0] == "xid" for k in kinds])
+        kind_is_slow = np.array([k[0] == "fail_slow" for k in kinds])
+        kind_xid = np.array([k[1] if k[1] is not None else -1
+                             for k in kinds], dtype=np.int64)
+        from repro.core.xid import XID_TABLE
+        kind_hw = np.array([k[0] == "unreachable"
+                            or (k[1] is not None and XID_TABLE[k[1]].hardware)
+                            for k in kinds])
+        kind_code = np.array([_KIND_CODES[k[0]] for k in kinds],
+                             dtype=np.int8)
 
-        # draw gap blocks until the cumulative time passes the horizon
-        times = np.empty(0)
         block = max(int(duration_h / self.mtbf_h * 1.5) + 8, 16)
-        total = 0.0
-        while total < duration_h:
-            gaps = rng.exponential(self.mtbf_h, block)
-            times = np.concatenate([times, total + np.cumsum(gaps)])
-            total = float(times[-1])
-        times = times[times < duration_h]
-        k = len(times)
-        if k == 0:
-            return []
+        cols = []
+        for seed in seeds:
+            rng = np.random.default_rng(seed)
+            hazard = self.node_hazard_for(seed)
+            times = np.empty(0)
+            total = 0.0
+            while total < duration_h:
+                gaps = rng.exponential(self.mtbf_h, block)
+                times = np.concatenate([times, total + np.cumsum(gaps)])
+                total = float(times[-1])
+            times = times[times < duration_h]
+            k = len(times)
+            if k == 0:
+                cols.append((times, np.empty(0, np.int64),
+                             np.empty(0, np.int64), np.empty(0),
+                             np.empty(0)))
+                continue
+            nodes = rng.choice(self.n_nodes, size=k, p=hazard)
+            kind_idx = rng.choice(len(kinds), size=k, p=probs)
+            is_xid = kind_is_xid[kind_idx]
+            is_slow = kind_is_slow[kind_idx]
+            leads = np.where(is_xid & (rng.random(k) < self.pre_xid_fraction),
+                             rng.uniform(0.25, 2.0, k),
+                             0.0)
+            slows = np.where(is_slow,
+                             rng.uniform(1.15, 1.6, k),
+                             1.0)
+            cols.append((times, nodes, kind_idx, leads, slows))
 
-        nodes = rng.choice(self.n_nodes, size=k, p=hazard)
-        kind_idx = rng.choice(len(kinds), size=k, p=probs)
-        is_xid = np.array([kinds[i][0] == "xid" for i in kind_idx])
-        is_slow = np.array([kinds[i][0] == "fail_slow" for i in kind_idx])
-        leads = np.where(is_xid & (rng.random(k) < self.pre_xid_fraction),
-                         rng.uniform(0.25, 2.0, k),   # gradual degradation
-                         0.0)
-        slows = np.where(is_slow,
-                         rng.uniform(1.15, 1.6, k),   # 15-60% step-time hit
-                         1.0)
-        return [FailureEvent(time_h=float(times[i]), node=int(nodes[i]),
-                             kind=kinds[kind_idx[i]][0],
-                             xid=kinds[kind_idx[i]][1],
-                             precursor_lead_h=float(leads[i]),
-                             slow_factor=float(slows[i]))
-                for i in range(k)]
+        counts = [len(c[0]) for c in cols]
+        offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        if offsets[-1] == 0:
+            empty_f = np.empty(0)
+            return FailureBatch(
+                seeds=list(seeds), offsets=offsets, times=empty_f,
+                nodes=np.empty(0, np.int64), kind=np.empty(0, np.int8),
+                xid=np.empty(0, np.int64), hardware=np.empty(0, bool),
+                leads=empty_f, slows=empty_f)
+        times = np.concatenate([c[0] for c in cols if len(c[0])])
+        nodes = np.concatenate([c[1] for c in cols if len(c[0])])
+        kind_idx = np.concatenate([c[2] for c in cols if len(c[0])])
+        leads = np.concatenate([c[3] for c in cols if len(c[0])])
+        slows = np.concatenate([c[4] for c in cols if len(c[0])])
+        return FailureBatch(
+            seeds=list(seeds), offsets=offsets, times=times,
+            nodes=nodes.astype(np.int64), kind=kind_code[kind_idx],
+            xid=kind_xid[kind_idx], hardware=kind_hw[kind_idx],
+            leads=leads, slows=slows)
 
     def _mix(self):
         kinds = []
@@ -134,3 +182,52 @@ class FailureInjector:
         probs.append(P_FAIL_SLOW * w.get("fail_slow", 1.0))
         probs = np.asarray(probs)
         return kinds, probs / probs.sum()
+
+
+# kind codes used by the stacked schedule (FailureBatch.kind)
+KIND_NAMES = ("xid", "unreachable", "fail_slow")
+_KIND_CODES = {name: i for i, name in enumerate(KIND_NAMES)}
+
+
+@dataclass
+class FailureBatch:
+    """S stacked failure schedules (struct-of-arrays).
+
+    Column ``i`` (rows ``offsets[i]:offsets[i+1]``) is the schedule for
+    ``seeds[i]``, bit-identical to the scalar ``sample`` draw for that
+    seed.  ``hardware`` pre-resolves ``FailureEvent.is_hardware`` so the
+    batched campaign engine never touches the XID table in its hot loop.
+    """
+    seeds: List[int]
+    offsets: np.ndarray            # (S+1,) int64
+    times: np.ndarray              # (K,) hours
+    nodes: np.ndarray              # (K,) int64
+    kind: np.ndarray               # (K,) int8 — index into KIND_NAMES
+    xid: np.ndarray                # (K,) int64, -1 = none
+    hardware: np.ndarray           # (K,) bool
+    leads: np.ndarray              # (K,) precursor lead hours
+    slows: np.ndarray              # (K,) fail-slow step-time factor
+    _cache: Dict[int, List[FailureEvent]] = field(default_factory=dict,
+                                                  repr=False)
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.seeds)
+
+    def count(self, i: int) -> int:
+        return int(self.offsets[i + 1] - self.offsets[i])
+
+    def events(self, i: int) -> List[FailureEvent]:
+        """Materialize seed ``i``'s schedule as FailureEvent objects."""
+        if i not in self._cache:
+            a, b = int(self.offsets[i]), int(self.offsets[i + 1])
+            self._cache[i] = [
+                FailureEvent(time_h=float(self.times[j]),
+                             node=int(self.nodes[j]),
+                             kind=KIND_NAMES[self.kind[j]],
+                             xid=int(self.xid[j]) if self.xid[j] >= 0
+                             else None,
+                             precursor_lead_h=float(self.leads[j]),
+                             slow_factor=float(self.slows[j]))
+                for j in range(a, b)]
+        return self._cache[i]

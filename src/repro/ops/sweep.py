@@ -9,6 +9,16 @@ published numbers.
 The per-campaign worker is a module-level function (`run_campaign`) taking
 plain dicts, so specs pickle across process boundaries and results are
 deterministic for fixed (scenario, seed) regardless of executor choice.
+
+Monte Carlo mode: ``SweepRunner(scenarios, mc_seeds=256)`` replaces the
+one-process-per-seed fan-out with one `BatchedCampaignEngine` pass per
+scenario — hundreds of seeds in a single stacked-numpy simulation, with
+per-seed findings identical to the pool path (the engine's parity
+contract).  At >=8 seeds the report grows distributional columns
+(median / IQR / 95% CI of the mean) for the F1-F4 findings and the
+proactive-vs-reactive goodput delta, which is the point: headline numbers
+from one 73-day trajectory are point estimates; the Monte Carlo layer
+reports how wide they actually are.
 """
 from __future__ import annotations
 
@@ -182,6 +192,42 @@ class SweepResult:
             out[sc.name] = agg
         return out
 
+    def distribution(self) -> Dict[str, Dict[str, dict]]:
+        """scenario -> metric -> distribution stats over seeds.
+
+        Each entry carries ``n``, ``mean``, ``median``, ``q25``/``q75``
+        (the IQR) and a normal-approximation 95% CI of the mean
+        (``ci_lo``/``ci_hi``; degenerate at n=1).  None values (metric not
+        applicable for that seed) are skipped, like `aggregate`.
+        """
+        out: Dict[str, Dict[str, dict]] = {}
+        for sc in self.scenarios:
+            per = [o.findings for o in self.outcomes if o.scenario == sc.name]
+            keys = sorted({k for f in per for k in f})
+            stats: Dict[str, dict] = {}
+            for k in keys:
+                vals = [f[k] for f in per if f.get(k) is not None]
+                if not vals or not all(
+                        isinstance(v, (int, float)) for v in vals):
+                    continue
+                a = np.asarray(vals, dtype=float)
+                mean = float(a.mean())
+                if len(a) > 1:
+                    half = 1.96 * float(a.std(ddof=1)) / np.sqrt(len(a))
+                else:
+                    half = 0.0
+                stats[k] = {
+                    "n": len(a),
+                    "mean": mean,
+                    "median": float(np.median(a)),
+                    "q25": float(np.percentile(a, 25)),
+                    "q75": float(np.percentile(a, 75)),
+                    "ci_lo": mean - half,
+                    "ci_hi": mean + half,
+                }
+            out[sc.name] = stats
+        return out
+
     # -- rendering ----------------------------------------------------------
 
     _COLUMNS = [
@@ -245,6 +291,7 @@ class SweepResult:
             "at least one episode of that kind).",
             "",
         ]
+        parts += self._distribution_section()
         parts += self._f2_section()
         parts += self._control_section()
         parts += [
@@ -266,6 +313,66 @@ class SweepResult:
             "",
         ]
         return "\n".join(parts)
+
+    # findings that get distributional columns (metric, label, scale, fmt);
+    # F2 columns are deterministic fabric queries — identical across seeds
+    _DIST_COLUMNS = [
+        ("occupancy", "occ %", 100.0, "{:.1f}"),
+        ("goodput", "goodput %", 100.0, "{:.1f}"),
+        ("f1_detection_rate", "F1 det %", 100.0, "{:.0f}"),
+        ("f1_fp_per_day", "F1 fp/d", 1.0, "{:.2f}"),
+        ("f3_top3_share", "F3 top3 %", 100.0, "{:.0f}"),
+        ("f4_success_rate", "F4 succ %", 100.0, "{:.0f}"),
+        ("f4_gap_median_min", "F4 gap min", 1.0, "{:.1f}"),
+        ("f4_auto_downtime_h", "auto dt h", 1.0, "{:.2f}"),
+        ("f4_manual_downtime_h", "manual dt h", 1.0, "{:.2f}"),
+    ]
+
+    # distributional columns render from this many seeds up (below that,
+    # quartiles of a handful of campaigns would be noise dressed as rigor)
+    MIN_SEEDS_FOR_DISTRIBUTION = 8
+
+    @staticmethod
+    def _dist_cell(st: Optional[dict], scale: float, fmt: str) -> str:
+        if st is None:
+            return "—"
+        med = fmt.format(st["median"] * scale)
+        q25 = fmt.format(st["q25"] * scale)
+        q75 = fmt.format(st["q75"] * scale)
+        half = fmt.format((st["ci_hi"] - st["ci_lo"]) / 2 * scale)
+        return f"{med} [{q25}, {q75}] ±{half}"
+
+    def _distribution_section(self) -> List[str]:
+        """Median / IQR / 95%-CI columns over the seed axis — the
+        distributional form of the F1-F4 findings that the Monte Carlo
+        mode exists to produce."""
+        if len(self.seeds) < self.MIN_SEEDS_FOR_DISTRIBUTION:
+            return []
+        dist = self.distribution()
+        cols = [c for c in self._DIST_COLUMNS
+                if any(c[0] in dist[sc.name] for sc in self.scenarios)]
+        if not cols:
+            return []
+        parts = [
+            f"## Distributional findings ({len(self.seeds)} seeds)",
+            "",
+            "Cells are `median [q25, q75] ±half-width` of the normal-"
+            "approximation 95% CI of the mean.  The paper's headline "
+            "numbers are single-trajectory point estimates; these columns "
+            "say how wide each one actually is across seeds.",
+            "",
+            "| scenario | " + " | ".join(label for _, label, _, _ in cols)
+            + " |",
+            "|---" * (len(cols) + 1) + "|",
+        ]
+        for sc in self.scenarios:
+            row = [sc.name]
+            for key, _, scale, fmt in cols:
+                row.append(self._dist_cell(dist[sc.name].get(key),
+                                           scale, fmt))
+            parts.append("| " + " | ".join(row) + " |")
+        parts.append("")
+        return parts
 
     def _f2_section(self) -> List[str]:
         """Bandwidth-vs-node-count curves for fabric-backed scenarios: the
@@ -340,8 +447,13 @@ class SweepResult:
         parts.append("Δ goodput is shown only against a config-matched "
                      "non-control scenario in this sweep (identical "
                      "failure schedules, same seeds); `—` means no such "
-                     "baseline was swept.")
+                     "baseline was swept.  At >= "
+                     f"{self.MIN_SEEDS_FOR_DISTRIBUTION} seeds the Δ is "
+                     "the paired per-seed distribution: `mean±CI95 "
+                     "[q25, q75]`.")
         parts.append("")
+        per_seed = {(o.scenario, o.seed): o.findings
+                    for o in self.outcomes}
         parts.append("| scenario | goodput % | Δ goodput h (vs) | alarms | "
                       "TP | FP/day | urgent saves | saved h/TP | "
                       "wasted h/FP | drains | crashes dodged |")
@@ -354,12 +466,27 @@ class SweepResult:
         for sc in ctl_scenarios:
             a = agg[sc.name]
             baseline = self._reactive_twin(sc)
-            if baseline is not None \
-                    and agg[baseline.name].get("goodput") is not None \
-                    and a.get("goodput") is not None:
-                delta = (a["goodput"] - agg[baseline.name]["goodput"]) \
-                    * sc.duration_days * 24.0
-                delta_s = f"{delta:+.1f} ({baseline.name})"
+            deltas = []
+            if baseline is not None:
+                hours = sc.duration_days * 24.0
+                for seed in self.seeds:
+                    g_ctl = per_seed.get((sc.name, seed), {}).get("goodput")
+                    g_rea = per_seed.get((baseline.name, seed),
+                                         {}).get("goodput")
+                    if g_ctl is not None and g_rea is not None:
+                        deltas.append((g_ctl - g_rea) * hours)
+            if deltas:
+                mean = float(np.mean(deltas))
+                if len(deltas) >= self.MIN_SEEDS_FOR_DISTRIBUTION:
+                    half = 1.96 * float(np.std(deltas, ddof=1)) \
+                        / np.sqrt(len(deltas))
+                    q25, q75 = (q + 0.0 for q          # -0.0 -> 0.0
+                                in np.percentile(deltas, [25, 75]))
+                    delta_s = (f"{mean:+.1f}±{half:.1f} "
+                               f"[{q25:+.1f}, {q75:+.1f}] "
+                               f"({baseline.name})")
+                else:
+                    delta_s = f"{mean:+.1f} ({baseline.name})"
             else:
                 delta_s = "—"
             parts.append(
@@ -398,24 +525,39 @@ class SweepRunner:
     ``executor``: "process" (default — campaigns are CPU-bound pure Python/
     numpy), "thread", or "serial" (in-process, deterministic ordering, used
     by tests).
+
+    ``mc_seeds``: Monte Carlo mode.  ``mc_seeds=N`` overrides ``seeds``
+    with ``range(N)`` and routes every scenario through one
+    `BatchedCampaignEngine` pass instead of one executor task per seed —
+    the per-seed findings are identical (the engine's parity contract),
+    the wall clock is a fraction, and the report's distributional columns
+    light up.  The F1 telemetry sub-campaigns (``telemetry_days > 0``)
+    stay per-seed — a retained 30 s x ~300-metric store per seed is
+    memory-bound, not compute-bound — so Monte Carlo sweeps are designed
+    for the F2-F4 + goodput findings first.
     """
 
     def __init__(self, scenarios: Sequence[Union[Scenario, str]],
                  seeds: Iterable[int] = (0, 1, 2),
                  max_workers: Optional[int] = None,
-                 executor: str = "process"):
+                 executor: str = "process",
+                 mc_seeds: Optional[int] = None):
         self.scenarios = [get_scenario(s) if isinstance(s, str) else s
                           for s in scenarios]
         names = [s.name for s in self.scenarios]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate scenario names: {names}")
-        self.seeds = list(seeds)
+        self.seeds = list(range(mc_seeds)) if mc_seeds is not None \
+            else list(seeds)
+        self.mc_seeds = mc_seeds
         self.max_workers = max_workers
         if executor not in ("process", "thread", "serial"):
             raise ValueError(f"unknown executor {executor!r}")
         self.executor = executor
 
     def run(self) -> SweepResult:
+        if self.mc_seeds is not None:
+            return self._run_mc()
         tasks = [(sc.to_dict(), seed)
                  for sc in self.scenarios for seed in self.seeds]
         t0 = time.perf_counter()
@@ -436,5 +578,31 @@ class SweepRunner:
             (SweepOutcome(r["scenario"], r["seed"], r["findings"])
              for r in raw),
             key=lambda o: (order[o.scenario], o.seed))
+        return SweepResult(scenarios=self.scenarios, seeds=self.seeds,
+                           outcomes=outcomes, wall_s=wall)
+
+    def _run_mc(self) -> SweepResult:
+        """Monte Carlo path: one batched-engine pass per scenario."""
+        from repro.core.batch import BatchedCampaignEngine
+        t0 = time.perf_counter()
+        outcomes: List[SweepOutcome] = []
+        for sc in self.scenarios:
+            t_sc = time.perf_counter()
+            engine = BatchedCampaignEngine(sc.to_campaign_config(0))
+            findings_list = engine.run_findings(self.seeds)
+            f2 = _f2_findings(sc) if sc.storage_fabric else None
+            for seed, findings in zip(self.seeds, findings_list):
+                if f2:
+                    findings.update(f2)
+                if sc.telemetry_days > 0:
+                    findings.update(_f1_findings(sc, seed))
+                outcomes.append(SweepOutcome(sc.name, seed, findings))
+            # shared average, stamped after the (possibly F1-dominated)
+            # per-seed work so it matches what the pool path reports
+            per_campaign = (time.perf_counter() - t_sc) \
+                / max(len(self.seeds), 1)
+            for findings in findings_list:
+                findings["wall_s"] = per_campaign
+        wall = time.perf_counter() - t0
         return SweepResult(scenarios=self.scenarios, seeds=self.seeds,
                            outcomes=outcomes, wall_s=wall)

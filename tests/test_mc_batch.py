@@ -1,0 +1,252 @@
+"""Seed-batched Monte Carlo campaign engine: the parity contract.
+
+`BatchedCampaignEngine.run(seeds)[i]` must reproduce
+`ClusterSim(replace(cfg, seed=seeds[i])).run()` field-for-field (sessions,
+chains, failures, exclusion intervals, downtimes, lost-work hours,
+checkpoint counts, control-plane ledger — everything except the
+process-global ``session_id`` counter), and `run_findings` must match
+`compute_findings` of the scalar results value-for-value.  The property
+is exercised across retry policies, the proactive control plane
+(urgent saves + counterfactual ledger) and executed predictive drains.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.control.policy import ControlConfig
+from repro.control.streaming import StreamingDetector
+from repro.core.batch import BatchedCampaignEngine
+from repro.core.cluster import CampaignConfig, ClusterSim
+from repro.core.failures import FailureInjector
+from repro.core.precursor import DetectorConfig
+from repro.core.retry import chain_stats
+from repro.ops import SweepRunner, get_scenario
+from repro.ops.sweep import compute_findings
+
+
+def assert_result_parity(ref, got, tag=""):
+    """Field-for-field CampaignResult comparison (session_id exempt)."""
+    assert len(ref.sessions) == len(got.sessions), tag
+    for i, (a, b) in enumerate(zip(ref.sessions, got.sessions)):
+        for f in ("task_name", "n_nodes", "state", "nodes", "created_h",
+                  "started_h", "ended_h", "checkpoint_step", "error",
+                  "history"):
+            assert getattr(a, f) == getattr(b, f), (tag, i, f)
+    assert len(ref.chains) == len(got.chains), tag
+    for i, (a, b) in enumerate(zip(ref.chains, got.chains)):
+        assert a.task_name == b.task_name, (tag, i)
+        assert a.stopped_reason == b.stopped_reason, (tag, i)
+        assert a.attempts == b.attempts, (tag, i)
+    assert ref.failures == got.failures, tag
+    assert ref.exclusions.intervals == got.exclusions.intervals, tag
+    assert ref.downtimes == got.downtimes, tag
+    assert ref.checkpoint_events == got.checkpoint_events, tag
+    assert ref.lost_hours == got.lost_hours, tag
+    assert ref.duration_h == got.duration_h, tag
+    assert ref.checkpoint_save_s == got.checkpoint_save_s, tag
+    assert (ref.control is None) == (got.control is None), tag
+    if ref.control is not None:
+        a, b = ref.control, got.control
+        assert a.alarms == b.alarms, tag
+        assert a.urgent_saves == b.urgent_saves, tag
+        assert a.drains == b.drains, tag
+        assert a.urgent_save_h == b.urgent_save_h, tag
+        assert a.lost_work_avoided_h == b.lost_work_avoided_h, tag
+        assert a.failures_on_drained_node == b.failures_on_drained_node, tag
+
+
+def scalar_results(cfg, seeds):
+    return [ClusterSim(dataclasses.replace(cfg, seed=s)).run()
+            for s in seeds]
+
+
+# ---------------------------------------------------------------------------
+# failure schedule batching
+# ---------------------------------------------------------------------------
+
+def test_sample_batch_matches_per_seed_sample():
+    inj = FailureInjector(mtbf_h=40.0, kind_weights={"nvlink": 2.0})
+    seeds = [0, 3, 11, 42]
+    batch = inj.sample_batch(30 * 24.0, seeds)
+    for i, seed in enumerate(seeds):
+        solo = dataclasses.replace(inj, seed=seed).sample(30 * 24.0)
+        assert batch.events(i) == solo, seed
+        assert batch.count(i) == len(solo)
+        hw = batch.hardware[batch.offsets[i]:batch.offsets[i + 1]]
+        assert [bool(h) for h in hw] == [e.is_hardware for e in solo]
+
+
+def test_sample_batch_empty_horizon():
+    inj = FailureInjector()
+    batch = inj.sample_batch(0.01, [0, 1])
+    assert batch.count(0) == 0 and batch.events(1) == []
+
+
+# ---------------------------------------------------------------------------
+# reactive parity (the benchmark's configuration), >= 8 seeds
+# ---------------------------------------------------------------------------
+
+def test_reactive_parity_8_seeds():
+    cfg = CampaignConfig(duration_h=15 * 24.0)
+    seeds = list(range(8))
+    batched = BatchedCampaignEngine(cfg).run(seeds)
+    findings = BatchedCampaignEngine(cfg).run_findings(seeds)
+    for i, (seed, ref) in enumerate(zip(seeds, scalar_results(cfg, seeds))):
+        assert_result_parity(ref, batched[i], f"seed{seed}")
+        # retry-chain stats are identical down to the float
+        assert chain_stats(ref.retry_chains()) == \
+            chain_stats(batched[i].retry_chains()), seed
+        assert findings[i] == compute_findings(ref), seed
+
+
+def test_parity_across_retry_policies():
+    """Non-FIXED retry paths (exp backoff, structural stop) stay exact."""
+    seeds = [1, 5, 9]
+    for preset in ("exp-backoff", "smart-retry", "no-auto-retry"):
+        sc = get_scenario(preset).replace(duration_days=12.0)
+        cfg = sc.to_campaign_config(0)
+        batched = BatchedCampaignEngine(cfg).run(seeds)
+        for i, seed in enumerate(seeds):
+            ref = ClusterSim(sc.to_campaign_config(seed)).run()
+            assert_result_parity(ref, batched[i], f"{preset}-seed{seed}")
+
+
+def test_parity_storage_fabric_resolution():
+    """Fabric-resolved checkpoint timing flows through the batched path."""
+    sc = get_scenario("storage-fabric").replace(duration_days=10.0)
+    cfg = sc.to_campaign_config(0)
+    seeds = [0, 4]
+    batched = BatchedCampaignEngine(cfg).run(seeds)
+    for i, seed in enumerate(seeds):
+        ref = ClusterSim(sc.to_campaign_config(seed)).run()
+        assert_result_parity(ref, batched[i], f"fabric-seed{seed}")
+
+
+# ---------------------------------------------------------------------------
+# proactive parity: urgent saves, ledger, drains (>= 8 seeds combined)
+# ---------------------------------------------------------------------------
+
+def test_proactive_parity_with_ledger():
+    sc = get_scenario("proactive").replace(duration_days=2.0,
+                                           telemetry_pad_metrics=0)
+    cfg = sc.to_campaign_config(0)
+    seeds = list(range(8))
+    batched = BatchedCampaignEngine(cfg).run(seeds)
+    findings = BatchedCampaignEngine(cfg).run_findings(seeds)
+    n_alarms = 0
+    for i, seed in enumerate(seeds):
+        ref = ClusterSim(sc.to_campaign_config(seed)).run()
+        assert_result_parity(ref, batched[i], f"proactive-seed{seed}")
+        # the counterfactual ledger summarizes identically
+        assert ref.control.summarize(ref.failures, ref.duration_h) == \
+            batched[i].control.summarize(batched[i].failures,
+                                         batched[i].duration_h), seed
+        assert findings[i] == compute_findings(ref), seed
+        n_alarms += len(ref.control.alarms)
+    assert n_alarms > 0, "window produced no alarms — parity untested"
+
+
+def test_drain_parity():
+    """Executed predictive drains (span truncation, graceful handoff,
+    exclusion attribution) reproduce exactly."""
+    cfg = CampaignConfig(duration_h=7 * 24.0, telemetry_pad_metrics=0,
+                         telemetry_store=False,
+                         control=ControlConfig(drain=True))
+    seeds = [25, 7]
+    batched = BatchedCampaignEngine(cfg).run(seeds)
+    n_drains = 0
+    for i, seed in enumerate(seeds):
+        ref = ClusterSim(dataclasses.replace(cfg, seed=seed)).run()
+        assert_result_parity(ref, batched[i], f"drain-seed{seed}")
+        n_drains += ref.control.n_drains
+    assert n_drains > 0, "window executed no drains — parity untested"
+
+
+def test_engine_rejects_tick_engine():
+    with pytest.raises(ValueError, match="event engine"):
+        BatchedCampaignEngine(CampaignConfig(engine="tick"))
+
+
+# ---------------------------------------------------------------------------
+# detector seed axis
+# ---------------------------------------------------------------------------
+
+def test_push_group_matches_per_seed_push():
+    rng0 = np.random.default_rng(7)
+    T, n, S = 30, 12, 4
+    cfg = DetectorConfig()
+
+    def span(r):
+        v = {"DCGM_FI_DEV_GPU_UTIL": 99.0 + r.normal(0, 0.3, (T, n))}
+        for m in range(10):
+            a = 50 + r.normal(0, 1, (T, n))
+            if r.random() < 0.6:
+                a[T // 2:, 2] += 80.0
+            v[f"m{m}"] = a
+        return v
+
+    vals = [span(np.random.default_rng(100 + i)) for i in range(S)]
+    ts = [np.arange(T) * 30 / 3600 + i for i in range(S)]
+    ref = []
+    for i in range(S):
+        det = StreamingDetector(cfg)
+        out = []
+        for a in range(0, T, 7):
+            out += det.push(ts[i][a:a + 7],
+                            {k: v[a:a + 7] for k, v in vals[i].items()})
+        ref.append((out, det._streak.copy(), det._tick_offset))
+    dets = [StreamingDetector(cfg) for _ in range(S)]
+    outs = [[] for _ in range(S)]
+    for a in range(0, T, 7):
+        got = StreamingDetector.push_group(
+            dets, [ts[i][a:a + 7] for i in range(S)],
+            [{k: v[a:a + 7] for k, v in vals[i].items()}
+             for i in range(S)])
+        for i in range(S):
+            outs[i] += got[i]
+    assert sum(len(o) for o in outs) > 0
+    for i in range(S):
+        assert outs[i] == ref[i][0], i
+        assert np.array_equal(dets[i]._streak, ref[i][1])
+        assert dets[i]._tick_offset == ref[i][2]
+        assert dets[i].n_alarms == len(ref[i][0])
+
+
+# ---------------------------------------------------------------------------
+# SweepRunner Monte Carlo mode (the tier-1 batched-path selection)
+# ---------------------------------------------------------------------------
+
+def test_sweep_runner_mc_mode_matches_serial():
+    sc = get_scenario("paper-faithful").replace(duration_days=10.0)
+    mc = SweepRunner([sc], mc_seeds=10).run()
+    serial = SweepRunner([sc], seeds=range(10), executor="serial").run()
+    assert mc.seeds == list(range(10))
+    for a, b in zip(mc.outcomes, serial.outcomes):
+        fa = {k: v for k, v in a.findings.items() if k != "wall_s"}
+        fb = {k: v for k, v in b.findings.items() if k != "wall_s"}
+        assert a.seed == b.seed and fa == fb, a.seed
+
+
+def test_sweep_runner_mc_distribution_report():
+    sc = get_scenario("paper-faithful").replace(duration_days=8.0)
+    res = SweepRunner([sc], mc_seeds=10).run()
+    dist = res.distribution()[sc.name]
+    g = dist["goodput"]
+    assert g["n"] == 10
+    assert g["q25"] <= g["median"] <= g["q75"]
+    assert g["ci_lo"] <= g["mean"] <= g["ci_hi"]
+    md = res.to_markdown()
+    assert "## Distributional findings (10 seeds)" in md
+    assert "±" in md and "F4 succ %" in md
+    # below the threshold the section stays out of the report
+    few = SweepRunner([sc], seeds=(0, 1), executor="serial").run()
+    assert "Distributional findings" not in few.to_markdown()
+
+
+def test_sweep_runner_mc_storage_fabric_f2_columns():
+    sc = get_scenario("storage-fabric").replace(duration_days=5.0)
+    res = SweepRunner([sc], mc_seeds=8).run()
+    for o in res.outcomes:
+        assert o.findings["f2_load_util"] == pytest.approx(0.215, abs=0.01)
+        assert o.findings["f2_save_util"] == pytest.approx(0.160, abs=0.01)
