@@ -12,7 +12,7 @@ regenerate the baseline to start tracking them:
 
     REPRO_BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run \
         --only cluster_engine --only storage_fabric \
-        --only control_plane --only mc_batch \
+        --only control_plane --only mc_batch --only detector_backend \
         --json benchmarks/baselines/ci_baseline.json
 
 ``--require GROUP`` (repeatable) declares a gated group: at least one row
@@ -89,7 +89,9 @@ def main() -> None:
     print(f"{'benchmark':<34} {'baseline':>12} {'current':>12} {'ratio':>7}")
     for name in shared:
         ratio = cur[name] / base[name]
-        flag = " <-- REGRESSION" if ratio > args.factor else ""
+        delta_pct = (ratio - 1.0) * 100.0
+        flag = f" <-- REGRESSION ({delta_pct:+.0f}% vs baseline)" \
+            if ratio > args.factor else ""
         print(f"{name:<34} {base[name]:>10.0f}us {cur[name]:>10.0f}us "
               f"{ratio:>6.2f}x{flag}")
         if ratio > args.factor:
@@ -109,7 +111,9 @@ def main() -> None:
     if failures:
         worst = max(failures, key=lambda kv: kv[1])
         print(f"\nFAIL: {len(failures)} benchmark(s) regressed more than "
-              f"{args.factor:.1f}x (worst: {worst[0]} at {worst[1]:.2f}x)",
+              f"{args.factor:.1f}x (allowed {(args.factor-1)*100:+.0f}%; "
+              f"worst: {worst[0]} at {worst[1]:.2f}x = "
+              f"{(worst[1]-1)*100:+.0f}% vs baseline)",
               file=sys.stderr)
         sys.exit(1)
     print(f"\nOK: {len(shared)} benchmarks within {args.factor:.1f}x of "

@@ -4,14 +4,17 @@
 
 ``--only`` is repeatable; a bench runs when ANY given substring matches its
 name (CI: ``--only cluster_engine --only storage_fabric --only
-control_plane --only mc_batch``).  Prints ``name,us_per_call,derived``
-CSV; ``--json`` additionally writes the rows as a JSON document (the CI
-artifact, which ``benchmarks.check_regression`` gates against the
-committed baseline) stamped with the git SHA and an ISO-8601 UTC
-timestamp, so the archived ``BENCH_*.json`` perf trajectory stays
-attributable across PRs.  Set REPRO_BENCH_FAST=1 for the abbreviated
-suite (CI).  The roofline table (from the dry-run artifacts) is appended
-when benchmarks/results/dryrun_baseline.json exists.
+control_plane --only mc_batch --only detector_backend``).  Prints
+``name,us_per_call,derived`` CSV; ``--json`` additionally writes the rows
+as a JSON document (the CI artifact, which ``benchmarks.check_regression``
+gates against the committed baseline) stamped with the git SHA, an
+ISO-8601 UTC timestamp, the best-of-K setting, and — where a bench
+declares one — the backend each row ran on, so the archived
+``BENCH_*.json`` perf trajectory stays attributable across PRs.
+``--repeat K`` makes every default-configured timing best-of-K.  Set
+REPRO_BENCH_FAST=1 for the abbreviated suite (CI).  The roofline table
+(from the dry-run artifacts) is appended when
+benchmarks/results/dryrun_baseline.json exists.
 """
 from __future__ import annotations
 
@@ -44,10 +47,19 @@ def main() -> None:
                          "repeatable (any match runs the bench)")
     ap.add_argument("--json", default=None,
                     help="also write rows as JSON to this path")
+    ap.add_argument("--repeat", type=int, default=None, metavar="K",
+                    help="best-of-K timing for every `timed` call that "
+                         "does not set its own best_of (the min over K "
+                         "rounds strips runner noise; the gated CI "
+                         "groups already run their measured paths at "
+                         "best-of-3)")
     args = ap.parse_args()
 
-    from benchmarks import bench_kernels, bench_ops
+    from benchmarks import bench_kernels, bench_ops, common
     from benchmarks.common import FAST
+
+    if args.repeat is not None:
+        common.BEST_OF = max(args.repeat, 1)
 
     benches = bench_ops.all_benches() + bench_kernels.all_benches()
     print("name,us_per_call,derived")
@@ -57,20 +69,26 @@ def main() -> None:
         if args.only and not any(o in bench.__name__ for o in args.only):
             continue
         try:
-            for name, us, derived in bench():
+            for row in bench():
+                # rows are (name, us, derived) or (name, us, derived,
+                # backend) — the 4th element records which detection/
+                # kernel backend produced the timing
+                name, us, derived = row[:3]
+                backend = row[3] if len(row) > 3 else None
                 rows.append({"name": name, "us_per_call": us,
-                             "derived": derived})
+                             "derived": derived, "backend": backend})
                 print(f"{name},{us:.1f},\"{derived}\"", flush=True)
         except Exception as e:
             failures += 1
             traceback.print_exc()
             rows.append({"name": bench.__name__, "us_per_call": None,
-                         "derived": f"ERROR: {e}"})
+                         "derived": f"ERROR: {e}", "backend": None})
             print(f"{bench.__name__},nan,\"ERROR: {e}\"", flush=True)
 
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"fast": FAST, "only": args.only,
+                       "best_of": common.BEST_OF,
                        "git_sha": git_sha(),
                        "generated_at": datetime.now(
                            timezone.utc).isoformat(timespec="seconds"),

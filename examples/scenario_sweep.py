@@ -60,6 +60,13 @@ def main():
                          "the report; overrides --seeds with range(N) and "
                          "skips the per-seed F1 sub-campaign unless "
                          "--telemetry-days is set explicitly")
+    ap.add_argument("--detector-backend", default=None,
+                    choices=("numpy", "xla", "pallas"),
+                    help="streaming-detector pass-1 backend for control-"
+                         "plane scenarios: numpy (reference), xla (fused "
+                         "jitted XLA — the fast path off-TPU), pallas "
+                         "(TPU kernel).  Alarm sets are identical across "
+                         "backends; this trades wall-clock only")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny deterministic CI sweep: paper-faithful + "
                          "storage-fabric + proactive, 1 seed, 3 days, "
@@ -89,6 +96,8 @@ def main():
             sc = sc.replace(duration_days=args.days)
         if args.telemetry_days > 0:
             sc = sc.replace(telemetry_days=args.telemetry_days)
+        if args.detector_backend:
+            sc = sc.replace(detector_backend=args.detector_backend)
         scenarios.append(sc)
     seeds = [int(s) for s in args.seeds.split(",")]
 

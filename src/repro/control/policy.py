@@ -50,7 +50,14 @@ from repro.control.streaming import StreamingDetector
 @dataclass(frozen=True)
 class ControlConfig:
     """Policy knobs for the online detection→recovery loop."""
-    detector: DetectorConfig = DetectorConfig()
+    # default_factory: a class-level shared instance would alias every
+    # control plane's detector config (DetectorConfig is frozen today,
+    # but the aliasing is a trap for any future mutable field)
+    detector: DetectorConfig = field(default_factory=DetectorConfig)
+    # pass-1 implementation for the streaming detector: "numpy" (the
+    # parity oracle), "xla" (fused jitted XLA), "pallas" (TPU kernel) —
+    # all three produce the identical alarm set on tested telemetry
+    detector_backend: str = "numpy"
     # urgent checkpoint on any in-gang alarm
     urgent_checkpoint: bool = True
     urgent_cooldown_h: float = 0.5        # min spacing between urgent saves
@@ -142,7 +149,8 @@ class ControlPlane:
     def __init__(self, config: ControlConfig, urgent_save_s: float):
         self.cfg = config
         self.urgent_save_s = urgent_save_s
-        self.detector = StreamingDetector(config.detector)
+        self.detector = StreamingDetector(config.detector,
+                                          backend=config.detector_backend)
         self.stats = ControlStats()
         self.last_alarm_h: Dict[int, float] = {}
         self.pending_drain: Optional[DrainAction] = None

@@ -532,7 +532,10 @@ class _TelemetryBatcher:
 
 
 class ClusterSim:
-    def __init__(self, config: CampaignConfig = CampaignConfig()):
+    def __init__(self, config: Optional[CampaignConfig] = None):
+        # per-instance default (a shared default-argument instance would
+        # alias every sim's config)
+        config = config if config is not None else CampaignConfig()
         self.fabric: Optional[StorageFabric] = None
         if config.storage is not None:
             config = self._resolve_storage(config)

@@ -14,7 +14,7 @@ consistently dominant*, which is why the vote is across the whole metric set.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -58,8 +58,12 @@ def robust_peer_z(values: np.ndarray) -> np.ndarray:
 
 
 class PrecursorDetector:
-    def __init__(self, config: DetectorConfig = DetectorConfig()):
-        self.config = config
+    def __init__(self, config: Optional[DetectorConfig] = None,
+                 backend: str = "numpy"):
+        # per-instance default: a shared default-argument instance would
+        # alias every detector's config
+        self.config = config if config is not None else DetectorConfig()
+        self.backend = backend
 
     def scan(self, store: TimeSeriesStore) -> List[Alarm]:
         """Run detection over a full telemetry store; returns alarms.
@@ -68,10 +72,12 @@ class PrecursorDetector:
         single push of the whole store, so the offline and online paths
         share one implementation: a chunked online feed of the same store
         reproduces this alarm list exactly (see the control-plane parity
-        test).
+        test).  ``backend`` routes pass 1 through the fused
+        `repro.kernels.robust_stats` implementation ("xla" / "pallas");
+        the default numpy path is the parity oracle.
         """
         from repro.control.streaming import StreamingDetector
-        det = StreamingDetector(self.config)
+        det = StreamingDetector(self.config, backend=self.backend)
         return det.push(store.times(),
                         {name: store.series(name) for name in store.names})
 

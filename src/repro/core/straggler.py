@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import Deque, List
+from typing import Deque, List, Optional
 
 import numpy as np
 
@@ -45,7 +45,10 @@ class StragglerDetector:
     measure around the collective.
     """
 
-    def __init__(self, n_nodes: int, config: StragglerConfig = StragglerConfig()):
+    def __init__(self, n_nodes: int,
+                 config: Optional[StragglerConfig] = None):
+        # per-instance default, not a shared default-argument instance
+        config = config if config is not None else StragglerConfig()
         self.n = n_nodes
         self.cfg = config
         self.hist: List[Deque[float]] = [deque(maxlen=config.window)

@@ -1,0 +1,106 @@
+"""Fused robust-stats detection Pallas TPU kernel (the F1 hot loop).
+
+One VMEM pass per (seed, tick-tile, metric) grid cell fuses the four
+per-tick operations of the streaming detector's dominant pass:
+
+  1. masked peer median over the node lane (inactive peers at +inf),
+  2. MAD of the active cohort (second masked median on |x - med|),
+  3. robust z-scores with the MAD floor, and
+  4. the multi-signal vote accumulation across metrics.
+
+The node axis is small (63 on the paper's cluster; padded to the 128-lane
+tile), so the median is computed by *rank counting* instead of a sort:
+for each candidate value, count how many row entries are <= it, then take
+the minimum candidate whose count reaches the target rank.  That is an
+O(n^2) lane-parallel reduction — three VPU ops per order statistic —
+which selects exactly the same order statistics as the reference's sort
+(duplicates resolve to equal values), so the Pallas and XLA backends are
+bit-identical on the same float32 inputs.
+
+Grid = (S, T_tiles, B) with the metric axis innermost: each (seed, tile)
+output block is revisited B times and the vote counts accumulate in
+place — the whole multi-signal reduction never leaves VMEM.  The streak
+scan runs on the kernel's (S, T, n) vote output in plain XLA (see
+``ops.fused_detect``): it is O(S*T*n) int work, negligible next to the
+O(S*B*T*n) pass fused here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+T_TILE = 8          # float32 sublane tile
+N_LANES = 128       # node axis padded to one lane tile
+
+
+def _rank_select(filled, rank):
+    """k-th smallest per row by rank counting.
+
+    ``filled``: (T, n) with masked-out entries at +inf; ``rank``: (T, 1)
+    int32, the 0-based order statistic to select.  ``cnt[t, j]`` = how
+    many entries of row t are <= filled[t, j]; the k-th smallest is the
+    minimum value whose count reaches k+1.  Exact for duplicates: any
+    candidate tied with the true order statistic has the same value.
+    """
+    le = (filled[:, None, :] <= filled[:, :, None])      # (T, cand, n)
+    cnt = le.sum(axis=-1, dtype=jnp.int32)               # (T, cand)
+    ok = cnt >= rank + 1
+    return jnp.min(jnp.where(ok, filled, jnp.inf), axis=-1, keepdims=True)
+
+
+def _kernel(x_ref, act_ref, hit_ref, *, z_threshold):
+    """One (seed, tick-tile, metric) cell: z-scores -> vote accumulation."""
+    b = pl.program_id(2)
+    x = x_ref[0, 0]                                      # (T_TILE, n) f32
+    active = act_ref[0]                                  # (T_TILE, n) bool
+    mask = active & ~jnp.isnan(x)
+    m = jnp.maximum(mask.sum(axis=-1, keepdims=True), 1).astype(jnp.int32)
+    k_lo, k_hi = (m - 1) // 2, m // 2
+
+    filled = jnp.where(mask, x, jnp.inf)
+    med = (_rank_select(filled, k_lo) + _rank_select(filled, k_hi)) * 0.5
+    any_active = mask.any(axis=-1, keepdims=True)
+    med = jnp.where(any_active, med, 0.0)                # nan_to_num step
+    dev = jnp.where(mask, jnp.abs(x - med), jnp.inf)
+    mad = (_rank_select(dev, k_lo) + _rank_select(dev, k_hi)) * 0.5
+    mad = jnp.where(any_active, mad, 0.0)
+
+    scale = 1.4826 * mad
+    floor = jnp.maximum(1e-12, 1e-6 * jnp.maximum(jnp.abs(med), 1.0))
+    scale = jnp.where(scale < 1e-12, floor, scale)
+    z = jnp.abs((x - med) / scale)
+    contrib = ((z > z_threshold) & mask).astype(jnp.int32)
+
+    @pl.when(b == 0)
+    def _init():
+        hit_ref[0] = contrib
+
+    @pl.when(b > 0)
+    def _accum():
+        hit_ref[0] += contrib
+
+
+def robust_hit_blocks(x, active, *, z_threshold: float,
+                      interpret: bool = False):
+    """Vote counts over padded blocks: (S, B, T, n) f32 -> (S, T, n) i32.
+
+    ``T`` must be a multiple of ``T_TILE`` and ``n`` of ``N_LANES``
+    (``ops.py`` pads; padded nodes/ticks arrive inactive, so they never
+    join a cohort or a vote).
+    """
+    S, B, T, n = x.shape
+    kern = functools.partial(_kernel, z_threshold=float(z_threshold))
+    return pl.pallas_call(
+        kern,
+        grid=(S, T // T_TILE, B),
+        in_specs=[
+            pl.BlockSpec((1, 1, T_TILE, n), lambda s, t, b: (s, b, t, 0)),
+            pl.BlockSpec((1, T_TILE, n), lambda s, t, b: (s, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T_TILE, n), lambda s, t, b: (s, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, T, n), jnp.int32),
+        interpret=interpret,
+    )(x, active)

@@ -1,0 +1,258 @@
+"""Dispatch for the fused robust-stats detection pass.
+
+``detect_block`` is the one entry point the streaming detector calls: it
+takes a stacked ``(S, B, T, n)`` metric block (S seeds x B metrics x T
+ticks x n nodes), the ``(S, T, n)`` peer-cohort mask and the ``(S, n)``
+carried streaks, and returns the per-tick vote counts plus the
+persistence streaks — the detector's whole pass 1 on device (Pallas TPU
+kernel or the jitted-XLA reference; ``ckpt_pack``-style layout).  The
+numpy implementation in ``repro.control.streaming`` stays the parity
+oracle: both compiled backends must produce the identical alarm set, and
+the tier-1 backend tests plus the ``detector_backend`` benchmark assert
+exactly that.
+
+Shape discipline — the part that makes the compiled path deployable:
+the campaign engines emit spans whose (seed-group, tick) shapes vary
+run to run (groups shrink as seeds halt; boundary chunks are short; a
+drain-less span can be 2048 ticks).  Compiling per exact shape would
+swamp a Monte Carlo run with recompiles (~1 s per shape for the unrolled
+sorting network), so:
+
+* the seed axis is padded to a power of two and the tick axis to a
+  64-multiple, tiled at ``TILE_T`` — a handful of *cheap* jit entries
+  per campaign (the pre/post stages compile in ~50 ms);
+* the expensive sorting network is jitted on flattened ``(rows, n_pow2)``
+  2-D input only, with rows padded to eighth-octave buckets (grain
+  ``next_pow2(rows) / 8`` — <= 12.5% pad waste, at most 8 entries per
+  octave and far fewer in practice), shared by every campaign, span
+  shape and metric chunk;
+* metric axes larger than ``BLOCK_ELEMS`` are fed in chunks (votes
+  accumulate; the streak scan runs once), bounding the transient device
+  buffer exactly like the numpy path's block budget.
+
+Padded seeds/ticks/rows arrive inactive (or as +inf sort rows) and are
+sliced away — they never join a cohort, a vote, or a streak.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.robust_stats.kernel import (N_LANES, T_TILE,
+                                               robust_hit_blocks)
+from repro.kernels.robust_stats.ref import (bitonic_sort_rows,
+                                            bitonic_sort_rows_loop,
+                                            filled_rows_ref,
+                                            hit_from_sorted_ref,
+                                            streak_scan_ref)
+
+#: backends the streaming detector accepts ("numpy" is the oracle path
+#: implemented in repro.control.streaming; the other two land here)
+BACKENDS = ("numpy", "xla", "pallas")
+
+# metric-axis chunk budget (elements of one stacked (S, B, T, n) chunk)
+BLOCK_ELEMS = 1 << 26
+
+# spans smaller than this (stacked elements) are cheaper on the numpy
+# oracle than on a device round trip (padding, transfer, ~10 dispatches)
+# — the streaming detector routes them back to numpy.  Bit-exact either
+# way; this is pure dispatch, like any size-gated BLAS offload.
+COMPILED_MIN_ELEMS = 1 << 21
+
+# tick-axis tile: long spans are cut into TILE_T slabs so the jit cache
+# sees one canonical width instead of every emitted span length
+TILE_T = 256
+
+
+def validate_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown detector backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    return backend
+
+
+def _next_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+def _row_bucket(r: int) -> int:
+    """Eighth-octave row bucket: <= 12.5% pad waste on the shapes where
+    the sort time matters, a handful of sort cache entries per octave
+    (the 4096 floor keeps tiny pushes from paying a big-bucket sort)."""
+    grain = max(4096, _next_pow2(r) // 8)
+    return -(-r // grain) * grain
+
+
+def _tick_layout(T: int):
+    """Tile widths covering T: full TILE_T slabs + a 64-multiple tail."""
+    tiles = [TILE_T] * (T // TILE_T)
+    tail = T % TILE_T
+    if tail:
+        tiles.append(-(-tail // 64) * 64)
+    return tiles or [64]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# -- jit stages --------------------------------------------------------------
+
+_filled = jax.jit(filled_rows_ref)
+_post = jax.jit(hit_from_sorted_ref)
+# sort inputs are always freshly-built temporaries — donate them so XLA
+# reuses the buffer instead of allocating another rows x 64 f32 block
+_sort_net = jax.jit(bitonic_sort_rows,       # fast runtime, ~1 s compile
+                    donate_argnums=0)
+_sort_loop = jax.jit(bitonic_sort_rows_loop,  # ~25% slower, ~0.3 s compile
+                     donate_argnums=0)
+_streak = jax.jit(streak_scan_ref)
+
+# row counts below this sort via the fori-loop network: at small shapes
+# the runtime difference is milliseconds while the compile difference is
+# ~0.7 s per bucket — and small long-tail shapes are the many ones
+_SORT_NET_MIN_ROWS = 1 << 16
+
+
+def _hit_xla(block, active, z_threshold):
+    """One (tile, metric-chunk) vote pass: cheap pre/post jits around the
+    row-bucketed sort, so only the 2-D sort carries a heavy compile —
+    and only at the few large buckets where its runtime edge matters."""
+    S, Bc, W, n = block.shape
+    filled = _filled(block, active)                   # (S, Bc, W, n_pow2)
+    npad = filled.shape[-1]
+    rows = S * Bc * W
+    rb = _row_bucket(rows)
+    v = filled.reshape(rows, npad)
+    if rb != rows:
+        v = jnp.concatenate(
+            [v, jnp.full((rb - rows, npad), jnp.inf, v.dtype)])
+    sort = _sort_net if rb >= _SORT_NET_MIN_ROWS else _sort_loop
+    s = sort(v)[:rows].reshape(S, Bc, W, npad)
+    return _post(s, block, active, jnp.float32(z_threshold))
+
+
+@functools.partial(jax.jit, static_argnames=("z_threshold", "interpret"))
+def _hit_pallas(block, active, *, z_threshold, interpret):
+    """Pad to the kernel's (T_TILE, N_LANES) tiles, run, slice back."""
+    S, B, T, n = block.shape
+    pt = (-T) % T_TILE
+    pn = (-n) % N_LANES
+    if pt or pn:
+        block = jnp.pad(block, ((0, 0), (0, 0), (0, pt), (0, pn)))
+        active = jnp.pad(active, ((0, 0), (0, pt), (0, pn)))
+    hit = robust_hit_blocks(block, active, z_threshold=z_threshold,
+                            interpret=interpret)
+    return hit[:, :T, :n]
+
+
+# -- the public entry points -------------------------------------------------
+
+def bucket_layout(S: int, T: int):
+    """(padded seeds, tick-tile widths) for a (S, …, T, n) span — callers
+    that build host blocks can allocate the bucketed buffer directly and
+    pass ``prepadded`` to :func:`hit_block`, skipping a copy."""
+    return _next_pow2(S), _tick_layout(T)
+
+
+def hit_block(block: np.ndarray, active: np.ndarray, *, z_threshold: float,
+              backend: str = "xla", interpret: bool = None,
+              prepadded: Tuple[int, int] = None) -> np.ndarray:
+    """Multi-signal vote counts for one stacked metric chunk.
+
+    ``block``: (S, B, T, n) metric values (cast to float32 on the way
+    in); ``active``: (S, T, n) bool cohort mask.  Returns (S, T, n)
+    int32.  Callers with more metrics than ``BLOCK_ELEMS`` permits (or
+    with per-chunk host buffers, like the streaming detector) call this
+    per chunk and sum — vote counts are additive across metrics.
+
+    ``prepadded=(S, T)`` declares that ``block``/``active`` already have
+    the :func:`bucket_layout` shape with real data in the leading
+    ``[:S, …, :T]`` corner and zeros elsewhere.
+    """
+    validate_backend(backend)
+    if backend == "numpy":
+        raise ValueError("hit_block is the compiled path; the numpy "
+                         "oracle lives in repro.control.streaming")
+    if backend == "pallas" and interpret is None:
+        interpret = not _on_tpu()
+    if prepadded is not None:
+        S, T = prepadded
+        Sp, B, Tp, n = block.shape
+        layout = _tick_layout(T)
+        if (Sp, Tp) != (_next_pow2(S), sum(layout)):
+            raise ValueError(f"prepadded block {block.shape} does not "
+                             f"match bucket_layout({S}, {T})")
+        padded, act = np.asarray(block, dtype=np.float32), active
+    else:
+        S, B, T, n = block.shape
+        Sp = _next_pow2(S)
+        layout = _tick_layout(T)
+        Tp = sum(layout)
+        padded = np.zeros((Sp, B, Tp, n), dtype=np.float32)
+        padded[:S, :, :T] = block
+        act = np.zeros((Sp, Tp, n), dtype=bool)
+        act[:S, :T] = active
+    act_j = jnp.asarray(act)
+
+    chunk_b = max(BLOCK_ELEMS // max(Sp * max(layout) * n, 1), 1)
+    hit = np.empty((Sp, Tp, n), dtype=np.int32)
+    t0 = 0
+    for width in layout:
+        a_tile = act_j[:, t0:t0 + width]
+        parts = []
+        for i in range(0, B, chunk_b):
+            x = jnp.asarray(padded[:, i:i + chunk_b, t0:t0 + width])
+            if backend == "pallas":
+                parts.append(_hit_pallas(
+                    x, a_tile, z_threshold=float(z_threshold),
+                    interpret=interpret))
+            else:
+                parts.append(_hit_xla(x, a_tile, z_threshold))
+        tile_hit = parts[0]
+        for p in parts[1:]:
+            tile_hit = tile_hit + p
+        hit[:, t0:t0 + width] = np.asarray(tile_hit)
+        t0 += width
+    return hit[:S, :T]
+
+
+def streak_scan(hit: np.ndarray, carry: np.ndarray,
+                min_signals: int) -> np.ndarray:
+    """Compiled persistence-streak scan over accumulated vote counts.
+
+    ``hit``: (S, T, n) int32; ``carry``: (S, n) pre-span streaks.
+    Bucketed like the vote pass (padded rows never vote, so their
+    streaks are 0 and slice away).
+    """
+    S, T, n = hit.shape
+    Sp, Tp = _next_pow2(S), sum(_tick_layout(T))
+    over = np.zeros((Sp, Tp, n), dtype=bool)
+    over[:S, :T] = hit >= min_signals
+    car = np.zeros((Sp, n), dtype=np.int32)
+    car[:S] = carry
+    streak = _streak(jnp.asarray(over), jnp.asarray(car))
+    return np.asarray(streak)[:S, :T]
+
+
+def detect_block(block: np.ndarray, active: np.ndarray, carry: np.ndarray,
+                 *, z_threshold: float, min_signals: int,
+                 backend: str = "xla",
+                 interpret: bool = None) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused pass-1 of the streaming detector on a stacked span group.
+
+    Returns numpy ``(hit, streak)``, both (S, T, n) int32: the
+    multi-signal vote counts and the consecutive-hit streaks (alarms are
+    ``streak == persistence``, which the caller resolves — attribution
+    stays host side).
+    """
+    hit = hit_block(block, active, z_threshold=z_threshold,
+                    backend=backend, interpret=interpret)
+    return hit, streak_scan(hit, carry, min_signals)

@@ -93,12 +93,20 @@ class Scenario:
     control_drain: bool = False              # confirmed alarm -> drain node
     control_drain_confirm_alarms: int = 3    # same-node alarms that confirm
     control_alarm_memory_h: float = 4.0      # retry placement avoids alarmed
+    # streaming-detector pass-1 implementation: "numpy" (reference /
+    # parity oracle) | "xla" (fused jitted XLA) | "pallas" (TPU kernel).
+    # The compiled backends produce the identical alarm set, so campaign
+    # trajectories are backend-invariant; switch for wall-clock only.
+    detector_backend: str = "numpy"
 
     # escape hatch: raw CampaignConfig field overrides applied last
     overrides: Dict[str, float] = field(default_factory=dict)
 
     def __post_init__(self):
         RetryPolicy(self.retry_policy)                  # validate early
+        if self.detector_backend != "numpy":
+            from repro.kernels.robust_stats.ops import validate_backend
+            validate_backend(self.detector_backend)
         if self.checkpoint_strategy not in ("fixed", "young_daly"):
             raise ValueError(
                 f"unknown checkpoint_strategy {self.checkpoint_strategy!r}")
@@ -167,7 +175,8 @@ class Scenario:
             urgent_checkpoint=self.control_urgent_checkpoint,
             drain=self.control_drain,
             drain_confirm_alarms=self.control_drain_confirm_alarms,
-            alarm_memory_h=self.control_alarm_memory_h)
+            alarm_memory_h=self.control_alarm_memory_h,
+            detector_backend=self.detector_backend)
 
     def to_campaign_config(self, seed: int = 0) -> CampaignConfig:
         delta_s = self.resolve_delta_s()

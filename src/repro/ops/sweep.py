@@ -110,7 +110,10 @@ def _f1_findings(scenario: Scenario, seed: int) -> Dict[str, float]:
                            telemetry=True, control_plane=False)
     res = ClusterSim(sub.to_campaign_config(seed)).run()
     xid_fails = [f for f in res.failures if f.kind == "xid"]
-    alarms = PrecursorDetector(DetectorConfig()).scan(res.store)
+    # the offline scan is the same pass-1 hot loop the fast path serves:
+    # the scenario's backend switch covers it too (alarms identical)
+    alarms = PrecursorDetector(
+        DetectorConfig(), backend=scenario.detector_backend).scan(res.store)
     ev = evaluate(alarms, xid_fails, res.duration_h)
     # windows with no XID event cannot score detection (None -> skipped in
     # aggregation); the FP rate is meaningful either way

@@ -151,8 +151,9 @@ class FabricTransferResult:
 class StorageFabric:
     """N client slot tables contending for one shared NFS server."""
 
-    def __init__(self, config: FabricConfig = FabricConfig()):
-        self.config = config
+    def __init__(self, config: Optional[FabricConfig] = None):
+        # per-instance default, not a shared default-argument instance
+        self.config = config if config is not None else FabricConfig()
 
     # ------------------------------------------------------------------
     # analytic service model (deterministic; used by sim + campaign)

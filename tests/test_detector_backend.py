@@ -1,0 +1,288 @@
+"""Detection fast path: fused robust-stats backends vs the numpy oracle.
+
+The contract under test is exact alarm-set parity: the compiled backends
+("xla" jitted reference, "pallas" TPU kernel — interpreted off-TPU) must
+produce the identical alarms (same (tick, node) pairs, same vote counts,
+same attribution) and identical carry state as the numpy path, so every
+parity contract built on the numpy detector (PR-3 streaming==scan, PR-4
+batched==scalar) survives a backend switch untouched.  Plus the
+``_nanmedian_rows`` edge paths and the shared-mutable-default fixes that
+ride along with this layer.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.control.streaming import StreamingDetector, _nanmedian_rows
+from repro.core.precursor import DetectorConfig, PrecursorDetector
+from repro.kernels.robust_stats.ops import detect_block, validate_backend
+
+
+# ---------------------------------------------------------------------------
+# _nanmedian_rows edge paths (satellite)
+# ---------------------------------------------------------------------------
+
+def _np_nanmedian(a):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return np.nanmedian(a, axis=-1, keepdims=True)
+
+
+def test_nanmedian_rows_matches_numpy_baseline():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(40, 63))
+    a[rng.random((40, 63)) < 0.2] = np.nan
+    got = _nanmedian_rows(a)
+    np.testing.assert_array_equal(got, _np_nanmedian(a))
+
+
+def test_nanmedian_rows_sort_fallback_pathological_cohorts():
+    """> 8 distinct (k_lo, k_hi) ranks trips the full-sort fallback; the
+    selected order statistics must match the partition path bit-for-bit
+    (np.nanmedian is the external referee for both)."""
+    rng = np.random.default_rng(1)
+    rows, n = 24, 40
+    a = rng.normal(size=(rows, n))
+    # row i keeps i+1 valid entries -> cohort sizes 1..24, >8 distinct ks
+    for i in range(rows):
+        a[i, i + 1:] = np.nan
+    ks = np.unique([(m - 1) // 2 for m in range(1, rows + 1)]
+                   + [m // 2 for m in range(1, rows + 1)])
+    assert len(ks) > 8                       # the fallback is actually hit
+    np.testing.assert_array_equal(_nanmedian_rows(a), _np_nanmedian(a))
+
+
+def test_nanmedian_rows_all_nan_rows():
+    a = np.full((3, 7), np.nan)
+    a[1, :] = [1.0, np.nan, 3.0, np.nan, 2.0, np.nan, np.nan]
+    got = _nanmedian_rows(a)
+    assert np.isnan(got[0, 0]) and np.isnan(got[2, 0])
+    assert got[1, 0] == 2.0
+    np.testing.assert_array_equal(np.isnan(got), np.isnan(_np_nanmedian(a)))
+
+
+def test_nanmedian_rows_single_active_peer():
+    a = np.full((4, 9), np.nan)
+    for i in range(4):
+        a[i, 2 * i] = 10.0 * i - 5.0
+    got = _nanmedian_rows(a)
+    np.testing.assert_array_equal(got, _np_nanmedian(a))
+    assert got[2, 0] == 15.0
+
+
+# ---------------------------------------------------------------------------
+# fused detect_block vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+def _numpy_oracle(block, active, carry, zt, ms):
+    from repro.control.streaming import robust_peer_z_block
+    S, B, T, n = block.shape
+    hit = np.zeros((S, T, n), np.int32)
+    for s in range(S):
+        z = robust_peer_z_block(block[s], active[s])
+        hit[s] = ((z > zt) & active[s]).sum(axis=0, dtype=np.int32)
+    over = hit >= ms
+    idx = np.arange(1, T + 1, dtype=np.int64)[None, :, None]
+    last_reset = np.maximum.accumulate(np.where(over, 0, idx), axis=1)
+    streak = np.where(over, idx - last_reset, 0)
+    streak += np.where(over & (last_reset == 0), carry[:, None, :], 0)
+    return hit, streak
+
+
+@pytest.fixture(scope="module")
+def awkward_block():
+    """Odd shapes (bucketing pads S and T), NaN columns, all-inactive and
+    single-active rows, carried streaks — every edge the oracle handles."""
+    rng = np.random.default_rng(7)
+    S, B, T, n = 5, 9, 51, 63
+    block = rng.normal(50, 1, (S, B, T, n))
+    block[1, 2, 10:30, 5] += 80.0            # genuine anomaly
+    block[0, :, :, 7] = np.nan               # NaN node column
+    block[3, 4, 20, :] = np.nan              # all-NaN row for one metric
+    active = rng.random((S, T, n)) > 0.1
+    active[2, 5] = False                     # all-inactive tick
+    active[2, 6, :62] = False                # single active peer
+    carry = rng.integers(0, 4, (S, n)).astype(np.int64)
+    return block, active, carry
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_detect_block_matches_oracle(awkward_block, backend):
+    block, active, carry = awkward_block
+    zt, ms = 6.0, 4
+    hit_ref, streak_ref = _numpy_oracle(block, active, carry, zt, ms)
+    hit, streak = detect_block(block, active, carry, z_threshold=zt,
+                               min_signals=ms, backend=backend)
+    np.testing.assert_array_equal(hit, hit_ref)
+    np.testing.assert_array_equal(streak, streak_ref)
+
+
+def test_detect_block_rejects_numpy_and_unknown():
+    blk = np.zeros((1, 1, 4, 4))
+    act = np.ones((1, 4, 4), bool)
+    car = np.zeros((1, 4), np.int32)
+    with pytest.raises(ValueError, match="numpy oracle"):
+        detect_block(blk, act, car, z_threshold=6.0, min_signals=4,
+                     backend="numpy")
+    with pytest.raises(ValueError, match="unknown detector backend"):
+        validate_backend("cuda")
+
+
+# ---------------------------------------------------------------------------
+# StreamingDetector backend switch: alarm parity through push / push_group
+# ---------------------------------------------------------------------------
+
+def _mk_spans(S, T, n, n_metrics=8, seed=40):
+    vals, ts = [], []
+    for i in range(S):
+        r = np.random.default_rng(seed + i)
+        v = {"DCGM_FI_DEV_GPU_UTIL": np.full((T, n), 99.0)}
+        for m in range(n_metrics):
+            a = 50 + r.normal(0, 1, (T, n))
+            if r.random() < 0.7:
+                a[T // 2:, 3] += 80.0
+            v[f"m{m}"] = a
+        vals.append(v)
+        ts.append(np.arange(T) * 30 / 3600 + i)
+    return ts, vals
+
+
+@pytest.fixture
+def force_compiled(monkeypatch):
+    """Spans below COMPILED_MIN_ELEMS dispatch back to the numpy pass
+    (device round trips lose at small sizes); the parity tests force the
+    compiled route so they actually exercise it at test-sized spans."""
+    import repro.kernels.robust_stats.ops as rs_ops
+    monkeypatch.setattr(rs_ops, "COMPILED_MIN_ELEMS", 0)
+
+
+def test_small_spans_dispatch_back_to_numpy():
+    from repro.control.streaming import _worth_compiling
+    from repro.kernels.robust_stats.ops import COMPILED_MIN_ELEMS
+    assert not _worth_compiling(1, 9, 41, 16)          # test-sized span
+    assert _worth_compiling(256, 25, 120, 63)          # the mc block
+    assert COMPILED_MIN_ELEMS > 0
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_push_chunked_matches_numpy_backend(backend, force_compiled):
+    T, n = 41, 16
+    cfg = DetectorConfig(z_threshold=4.0, min_signals=3, persistence=2)
+    ts, vals = _mk_spans(1, T, n)
+    ref_det = StreamingDetector(cfg)
+    got_det = StreamingDetector(cfg, backend=backend)
+    ref, got = [], []
+    for a in range(0, T, 13):                # chunk boundaries mid-streak
+        sl = {k: v[a:a + 13] for k, v in vals[0].items()}
+        ref += ref_det.push(ts[0][a:a + 13], sl)
+        got += got_det.push(ts[0][a:a + 13], sl)
+    assert len(ref) > 0
+    assert got == ref                        # ticks, nodes, votes, metrics
+    assert np.array_equal(got_det._streak, ref_det._streak)
+    assert got_det._tick_offset == ref_det._tick_offset
+    assert got_det.n_alarms == ref_det.n_alarms
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_push_group_matches_numpy_backend(backend, force_compiled):
+    S, T, n = 4, 30, 12
+    cfg = DetectorConfig(z_threshold=4.0, min_signals=3)
+    ts, vals = _mk_spans(S, T, n)
+
+    def run(bk):
+        dets = [StreamingDetector(cfg, backend=bk) for _ in range(S)]
+        outs = [[] for _ in range(S)]
+        for a in range(0, T, 7):
+            got = StreamingDetector.push_group(
+                dets, [t[a:a + 7] for t in ts],
+                [{k: v[a:a + 7] for k, v in val.items()} for val in vals])
+            for i in range(S):
+                outs[i] += got[i]
+        return outs, dets
+
+    ref, _ = run("numpy")
+    got, dets = run(backend)
+    assert sum(len(o) for o in ref) > 0
+    assert got == ref
+
+
+def test_push_group_rejects_mixed_backends():
+    cfg = DetectorConfig()
+    dets = [StreamingDetector(cfg), StreamingDetector(cfg, backend="xla")]
+    ts, vals = _mk_spans(2, 4, 4, n_metrics=2)
+    with pytest.raises(ValueError, match="shared backend"):
+        StreamingDetector.push_group(dets, ts, vals)
+
+
+def test_unknown_backend_rejected_everywhere():
+    with pytest.raises(ValueError, match="unknown detector backend"):
+        StreamingDetector(backend="fortran")
+    from repro.ops import get_scenario
+    with pytest.raises(ValueError, match="unknown detector backend"):
+        get_scenario("proactive").replace(detector_backend="fortran")
+
+
+def test_precursor_scan_backend_parity(force_compiled):
+    """The offline scan path through the compiled backend reproduces the
+    numpy scan on simulated telemetry (a real store, ~40 metrics)."""
+    from repro.core.cluster import CampaignConfig, ClusterSim
+    res = ClusterSim(CampaignConfig(duration_h=6.0, telemetry=True,
+                                    telemetry_pad_metrics=12,
+                                    seed=11)).run()
+    ref = PrecursorDetector(DetectorConfig()).scan(res.store)
+    got = PrecursorDetector(DetectorConfig(), backend="xla").scan(res.store)
+    assert len(ref) > 0
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# control plane + scenario wiring
+# ---------------------------------------------------------------------------
+
+def test_scenario_backend_reaches_control_plane():
+    from repro.ops import get_scenario
+    sc = get_scenario("proactive").replace(detector_backend="xla")
+    cfg = sc.to_campaign_config(0)
+    assert cfg.control.detector_backend == "xla"
+    rt = type(sc).from_dict(sc.to_dict())    # serialization round-trip
+    assert rt.detector_backend == "xla"
+    from repro.control.policy import ControlPlane
+    plane = ControlPlane(cfg.control, urgent_save_s=18.0)
+    assert plane.detector.backend == "xla"
+
+
+def test_proactive_campaign_backend_invariant():
+    """End to end: the proactive campaign's control ledger and goodput are
+    identical under the compiled backend (alarm parity => identical
+    recovery actions => identical trajectory)."""
+    from repro.core.cluster import ClusterSim
+    from repro.ops import get_scenario
+    runs = {}
+    for backend in ("numpy", "xla"):
+        sc = get_scenario("proactive").replace(
+            duration_days=2.5, telemetry_pad_metrics=0,
+            detector_backend=backend)
+        runs[backend] = ClusterSim(sc.to_campaign_config(25)).run()
+    a, b = runs["numpy"], runs["xla"]
+    assert len(a.control.alarms) > 0
+    assert a.control.alarms == b.control.alarms
+    assert a.goodput_h() == b.goodput_h()
+    assert a.lost_hours == b.lost_hours
+
+
+# ---------------------------------------------------------------------------
+# shared-mutable-default fixes (satellite)
+# ---------------------------------------------------------------------------
+
+def test_default_configs_are_per_instance():
+    from repro.control.policy import ControlConfig
+    from repro.core.cluster import ClusterSim
+    from repro.core.straggler import StragglerDetector
+    from repro.storage.fabric import StorageFabric
+    assert StreamingDetector().config is not StreamingDetector().config
+    assert PrecursorDetector().config is not PrecursorDetector().config
+    assert ClusterSim().cfg is not ClusterSim().cfg
+    assert StorageFabric().config is not StorageFabric().config
+    assert StragglerDetector(4).cfg is not StragglerDetector(4).cfg
+    assert ControlConfig().detector is not ControlConfig().detector
