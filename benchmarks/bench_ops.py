@@ -686,9 +686,93 @@ def bench_scenario_sweep() -> list:
              f"F4 success: {succ} (paper 33.3%)")]
 
 
+# ---------------------------------------------------------------------------
+# infrastructure fault band: degraded-vs-clean overhead + parity gate
+# ---------------------------------------------------------------------------
+
+def bench_fault_taxonomy() -> list:
+    """The degrade-don't-kill infra band (net degradation windows,
+    escalating resource pressure, control-plane blind spots) threaded
+    through the batched engine: campaigns dominated by the band must not
+    cost materially more than the identical clean campaign (the window /
+    escalation / blind machinery is ledger arithmetic, not simulation
+    load), and the batched path must stay bit-identical to the scalar
+    engine per seed — degradation ledger, throttles, deferred alarms and
+    escalation crashes included."""
+    from repro.core.batch import BatchedCampaignEngine
+    from repro.core.cluster import ClusterSim
+    from repro.core.failures import INFRA_KINDS
+    from repro.ops import SweepRunner, get_scenario
+    from repro.ops.sweep import compute_findings
+
+    days = 4.0 if FAST else 10.0
+    seeds = range(4) if FAST else range(8)
+    degraded = get_scenario("infra-faults").replace(
+        duration_days=days, telemetry_pad_metrics=0)
+    clean = degraded.replace(
+        name="infra-clean", kind_weights={k: 0.0 for k in INFRA_KINDS})
+
+    cfg_deg = degraded.to_campaign_config(0)
+    cfg_clean = clean.to_campaign_config(0)
+    BatchedCampaignEngine(cfg_deg).run_findings([0])     # warm jit/caches
+
+    _, us_clean = timed(lambda: BatchedCampaignEngine(
+        cfg_clean).run_findings(list(seeds)), best_of=3)
+    find_deg, us_deg = timed(lambda: BatchedCampaignEngine(
+        cfg_deg).run_findings(list(seeds)), best_of=3)
+
+    overhead = us_deg / us_clean
+    if overhead > 1.2:
+        raise AssertionError(
+            f"infra band overhead x{overhead:.2f} over the clean campaign "
+            f"(deg={us_deg/1e6:.2f}s clean={us_clean/1e6:.2f}s; gate 1.2x)")
+
+    # bitwise batched==scalar parity on the degraded campaign, plus the
+    # findings fold (degradation ledger included) per seed
+    import dataclasses
+    deg_total = 0.0
+    for i, seed in enumerate(seeds):
+        res = BatchedCampaignEngine(cfg_deg).run([seed])[0]
+        ref = ClusterSim(dataclasses.replace(cfg_deg, seed=seed)).run()
+        same = (ref.failures == res.failures
+                and ref.lost_hours == res.lost_hours
+                and ref.degraded_hours == res.degraded_hours
+                and ref.downtimes == res.downtimes
+                and ref.checkpoint_events == res.checkpoint_events
+                and ref.goodput_h() == res.goodput_h()
+                and (ref.control is None) == (res.control is None)
+                and (ref.control is None
+                     or (ref.control.alarms == res.control.alarms
+                         and ref.control.throttles == res.control.throttles
+                         and ref.control.alarms_deferred
+                         == res.control.alarms_deferred)))
+        if not same:
+            raise AssertionError(f"infra batched/scalar parity broke "
+                                 f"at seed {seed}")
+        fa = {k: v for k, v in find_deg[i].items() if k != "wall_s"}
+        fb = {k: v for k, v in compute_findings(ref).items()
+              if k != "wall_s"}
+        if fa != fb:
+            raise AssertionError(f"infra findings parity broke "
+                                 f"at seed {seed}")
+        deg_total += fb["infra_degraded_h"]
+
+    if deg_total <= 0.0:
+        raise AssertionError("no degraded hours booked across seeds — "
+                             "the infra band never engaged")
+
+    return [("fault_taxonomy_overhead", us_deg,
+             f"{len(list(seeds))} seeds x {days:.0f}d infra-faults: "
+             f"degraded={us_deg/1e6:.2f}s clean={us_clean/1e6:.2f}s "
+             f"overhead=x{overhead:.2f} (gate <=1.2x) parity=exact "
+             f"(fields + findings, all seeds); "
+             f"degraded_h total={deg_total:.1f}")]
+
+
 def all_benches():
     return [bench_taxonomy, bench_storage_fabric, bench_youngdaly,
             bench_rpc, bench_ckpt_path, bench_io_sharding,
             bench_data_pipeline, bench_exclusion, bench_retry,
             bench_precursor, bench_control_plane, bench_cluster_engine,
-            bench_mc_batch, bench_detector_backend, bench_scenario_sweep]
+            bench_mc_batch, bench_detector_backend, bench_scenario_sweep,
+            bench_fault_taxonomy]

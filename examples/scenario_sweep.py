@@ -69,12 +69,14 @@ def main():
                          "backends; this trades wall-clock only")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny deterministic CI sweep: paper-faithful + "
-                         "storage-fabric + proactive, 1 seed, 3 days, "
-                         "serial, no F1, plus an mc_seeds spot check")
+                         "storage-fabric + proactive + infra-faults, "
+                         "1 seed, 3 days, serial, no F1, plus an mc_seeds "
+                         "spot check")
     args = ap.parse_args()
 
     if args.smoke:
-        args.scenarios = "paper-faithful,storage-fabric,proactive"
+        args.scenarios = "paper-faithful,storage-fabric,proactive," \
+                         "infra-faults"
         args.seeds = "0"
         args.days = 3.0
         args.telemetry_days = 0.0
@@ -127,17 +129,20 @@ def main():
 
     if args.smoke:
         # Monte Carlo spot check: the batched engine's findings must be
-        # identical to the serial per-seed path on the same seeds
-        sc = get_scenario("paper-faithful").replace(duration_days=3.0)
-        mc = SweepRunner([sc], mc_seeds=4).run()
-        ref = SweepRunner([sc], seeds=range(4), executor="serial").run()
-        for a, b in zip(mc.outcomes, ref.outcomes):
-            fa = {k: v for k, v in a.findings.items() if k != "wall_s"}
-            fb = {k: v for k, v in b.findings.items() if k != "wall_s"}
-            assert a.seed == b.seed and fa == fb, \
-                f"mc/serial findings diverged at seed {a.seed}"
-        print("mc_seeds smoke: batched findings == per-seed findings (4 "
-              "seeds)")
+        # identical to the serial per-seed path on the same seeds — on the
+        # paper mix and on the infra fault band (degradation ledger,
+        # escalations and blind-window replay included)
+        for name in ("paper-faithful", "infra-faults"):
+            sc = get_scenario(name).replace(duration_days=3.0)
+            mc = SweepRunner([sc], mc_seeds=4).run()
+            ref = SweepRunner([sc], seeds=range(4), executor="serial").run()
+            for a, b in zip(mc.outcomes, ref.outcomes):
+                fa = {k: v for k, v in a.findings.items() if k != "wall_s"}
+                fb = {k: v for k, v in b.findings.items() if k != "wall_s"}
+                assert a.seed == b.seed and fa == fb, \
+                    f"mc/serial findings diverged: {name} seed {a.seed}"
+            print(f"mc_seeds smoke [{name}]: batched findings == per-seed "
+                  "findings (4 seeds)")
 
 
 if __name__ == "__main__":

@@ -42,9 +42,44 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set
 
+from repro.core.failures import DEGRADE_KINDS
 from repro.core.precursor import Alarm, DetectorConfig, evaluate
 from repro.core.session import SessionState
 from repro.control.streaming import StreamingDetector
+
+# alarm classification for the infra fault band: a network-degradation
+# signature concentrates its top z-scores in transport/RPC metrics, a
+# resource-exhaustion signature in host-pressure metrics.  The >= 3 rule
+# separates them from existing alarm families (XID kills, fail-slow,
+# unreachable, gradual precursors), but exponential-tailed noise can
+# coincidentally meet it on a false positive — so the net-throttle policy
+# only engages when the campaign's schedule carries infra-band events
+# (``ControlPlane.infra_active``); pre-band campaigns stay bit-identical.
+NET_ALARM_METRICS = frozenset({
+    "node_mountstats_nfs_rpc_queue_depth",
+    "node_netstat_Tcp_transport_backlog_bytes",
+    "backendai_rpc_latency_ms",
+    "node_sockstat_TCP_alloc",
+    "node_mountstats_nfs_operations_response_time_seconds_total:GETATTR",
+})
+RESOURCE_ALARM_METRICS = frozenset({
+    "node_memory_MemAvailable_bytes",
+    "all_smi_sys_memory_used_bytes",
+    "node_vmstat_pgpgout",
+    "node_context_switches_total",
+    "DCGM_FI_DEV_GPU_UTIL",
+})
+
+
+def classify_alarm(alarm: Alarm) -> str:
+    """``"net"`` | ``"resource"`` | ``"node"`` from the alarm's top-4
+    attributed metrics (>= 3 votes in one class set)."""
+    top = [m for m, _ in alarm.top_metrics[:4]]
+    if sum(m in NET_ALARM_METRICS for m in top) >= 3:
+        return "net"
+    if sum(m in RESOURCE_ALARM_METRICS for m in top) >= 3:
+        return "resource"
+    return "node"
 
 
 @dataclass(frozen=True)
@@ -100,6 +135,11 @@ class ControlStats:
     urgent_save_h: float = 0.0            # total save time spent on alarms
     lost_work_avoided_h: float = 0.0      # vs the scheduled-cadence clock
     failures_on_drained_node: int = 0     # disruptions a drain dodged
+    # infra fault band responses
+    throttles: List[tuple] = field(default_factory=list)
+                                          # (time_h, node, alarm_idx): net
+                                          #   alarms waited out, not drained
+    alarms_deferred: int = 0              # alarms queued in blind windows
 
     @property
     def n_drains(self) -> int:
@@ -114,6 +154,16 @@ class ControlStats:
                        if s.alarm_idx not in ev.matched_alarm_ids)
         tp = ev.detected
         fp = ev.false_positives
+        # degradation-aware columns: detection of degrade-band windows
+        # (alarm on the affected node inside the window, small latency
+        # slack for chunked emission + persistence)
+        deg = [f for f in failures if f.kind in DEGRADE_KINDS]
+        deg_detected = sum(
+            1 for f in deg
+            if any(a.node == f.node
+                   and f.time_h <= a.time_h <= f.time_h + f.window_h + 0.25
+                   for a in self.alarms))
+        blind = [f for f in failures if f.kind == "ctrl_blind"]
         return {
             "n_alarms": float(len(self.alarms)),
             "tp": float(tp),
@@ -127,6 +177,13 @@ class ControlStats:
             "avoided_per_tp_h": self.lost_work_avoided_h / max(tp, 1),
             "n_drains": float(self.n_drains),
             "failures_avoided": float(self.failures_on_drained_node),
+            "n_throttles": float(len(self.throttles)),
+            "alarms_deferred": float(self.alarms_deferred),
+            "deg_windows": float(len(deg)),
+            "deg_detected": float(deg_detected),
+            "deg_detect_rate": deg_detected / max(len(deg), 1),
+            "n_blind_windows": float(len(blind)),
+            "blind_h": float(sum(f.window_h for f in blind)),
         }
 
 
@@ -156,6 +213,31 @@ class ControlPlane:
         self.pending_drain: Optional[DrainAction] = None
         self._last_urgent_h = -1e18
         self._node_alarms: Dict[int, List[float]] = {}   # confirmation ring
+        # control-plane blind windows (scheduler outages): alarms raised
+        # inside one cannot trigger actions — they queue and replay when
+        # visibility returns at the window's end
+        self._blind: List[tuple] = []                    # (t0, t1)
+        self._blind_queue: List[tuple] = []              # (alarm, idx)
+        self._blind_release = float("inf")
+        # the net-throttle policy only engages when the campaign schedule
+        # carries infra-band events (set by the engines at setup); noise
+        # alarms in pre-band campaigns keep the legacy urgent-save path
+        self.infra_active = False
+
+    def begin_blind(self, t0_h: float, t1_h: float):
+        """Register a scheduler-outage window [t0, t1) (campaign setup)."""
+        self._blind.append((t0_h, t1_h))
+
+    def _blind_at(self, t: float) -> Optional[float]:
+        """End of the blind window containing ``t``, if any."""
+        for b0, b1 in self._blind:
+            if b0 <= t < b1:
+                return b1
+        return None
+
+    def blind_ready(self, t: float) -> bool:
+        """True when queued blind-window decisions are due for replay."""
+        return bool(self._blind_queue) and t >= self._blind_release - 1e-12
 
     # -- telemetry-side hook (called by _TelemetryBatcher) -------------------
 
@@ -180,6 +262,21 @@ class ControlPlane:
         for alarm in alarms:
             idx = len(self.stats.alarms)
             self.stats.alarms.append(alarm)
+            blind_until = self._blind_at(alarm.time_h)
+            if blind_until is not None:
+                # scheduler outage: the alarm is recorded but cannot act —
+                # queue the decision for replay when visibility returns
+                self.stats.alarms_deferred += 1
+                self._blind_queue.append((alarm, idx))
+                self._blind_release = blind_until
+                continue
+            if self.infra_active and classify_alarm(alarm) == "net":
+                # network degradation: throttle and wait the window out —
+                # no urgent save (the gang still runs), no drain (the
+                # fabric, not the node, is the bottleneck), no placement
+                # taint (the node is healthy)
+                self.stats.throttles.append((alarm.time_h, alarm.node, idx))
+                continue
             self.last_alarm_h[alarm.node] = alarm.time_h
             cur = state.current
             in_gang = (cur is not None
@@ -217,7 +314,33 @@ class ControlPlane:
     # -- event-side hooks (called by the main loop) --------------------------
 
     def process(self, t: float, state):
-        """Execute a pending drain at the chunk boundary that raised it."""
+        """Execute a pending drain at the chunk boundary that raised it,
+        and replay decisions queued during a blind window once visibility
+        returns (actions land at ``t``, the window's end — the outage cost
+        is exactly that latency)."""
+        if self.blind_ready(t):
+            queued, self._blind_queue = self._blind_queue, []
+            self._blind_release = float("inf")
+            cfg = self.cfg
+            for alarm, idx in queued:
+                if self.infra_active and classify_alarm(alarm) == "net":
+                    self.stats.throttles.append((alarm.time_h, alarm.node,
+                                                 idx))
+                    continue
+                self.last_alarm_h[alarm.node] = alarm.time_h
+                cur = state.current
+                in_gang = (cur is not None
+                           and cur.state is SessionState.RUNNING
+                           and alarm.node in cur.nodes)
+                if not in_gang:
+                    continue
+                if cfg.urgent_checkpoint and t - self._last_urgent_h \
+                        >= cfg.urgent_cooldown_h:
+                    self._urgent_save(t, alarm.node, idx, state)
+                if cfg.drain and self.pending_drain is None \
+                        and self._confirmed(alarm):
+                    self.pending_drain = DrainAction(t, alarm.node, idx,
+                                                     executed=False)
         if self.pending_drain is None:
             return
         act = self.pending_drain

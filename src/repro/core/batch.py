@@ -44,7 +44,10 @@ import numpy as np
 from repro.core.cluster import (TICK_H, _MAX_SPAN_TICKS, CampaignConfig,
                                 CampaignResult, ClusterSim)
 from repro.core.exclusion import ExclusionInterval, ExclusionTracker
-from repro.core.failures import KIND_NAMES, FailureBatch, FailureInjector
+from repro.core.failures import (DEGRADE_KINDS, KIND_NAMES, FailureBatch,
+                                 FailureInjector, blind_windows,
+                                 degradation_windows, degraded_overlap_h,
+                                 escalation_events)
 from repro.core.retry import Attempt, Chain, RetryEngine, RetryPolicy
 from repro.core.session import Session, SessionState
 from repro.core.xid import XID_TABLE
@@ -242,6 +245,38 @@ class _Batch:
         self.session_log: List[List[list]] = [[] for _ in range(S)]
         self.record_log: List[list] = [[] for _ in range(S)]
 
+        # infra fault band (PR 6): degradation windows, escalation timers
+        # and blind-window wake-ups, derived deterministically from the
+        # stacked schedule by the same helpers the scalar engine uses.
+        # All structures stay empty (and the (S,) next-* clocks inf) for
+        # schedules without infra kinds, so legacy batches skip every new
+        # wavefront step.
+        self.has_infra = bool((fails.kind >= 3).any())
+        self.deg_windows: List[list] = [[] for _ in range(S)]
+        self.degraded: List[List[float]] = [[] for _ in range(S)]
+        self.esc_list: List[list] = [[] for _ in range(S)]
+        self.esc_ptr = [0] * S
+        self.next_esc = np.full(S, inf)
+        self.blind_list: List[list] = [[] for _ in range(S)]
+        self.blind_ptr = [0] * S
+        self.next_blind = np.full(S, inf)
+        if self.has_infra:
+            for i in range(S):
+                evs = fails.events(i)
+                self.deg_windows[i] = degradation_windows(evs)
+                es = escalation_events(evs)
+                self.esc_list[i] = es
+                if es:
+                    self.next_esc[i] = es[0][0]
+                if self.has_control:
+                    # blind ends only wake the loop when a control plane
+                    # exists to replay queued decisions (scalar candidate
+                    # list adds them under the same condition)
+                    be = [b1 for _, b1 in blind_windows(evs)]
+                    self.blind_list[i] = be
+                    if be:
+                        self.next_blind[i] = be[0]
+
         # telemetry / control (populated by the engine when enabled)
         self.planes: List[Optional[ControlPlane]] = [None] * S
         self.views: List[Optional[_SeedView]] = [None] * S
@@ -305,17 +340,30 @@ class BatchedCampaignEngine:
         for i, seed in enumerate(B.seeds):
             exp = ExporterSuite(cfg.n_nodes, seed=seed, n_pad=n_pad,
                                 storage_levels=levels)
-            for ev in B.fails.events(i):
+            evs = B.fails.events(i)
+            for ev in evs:
                 if ev.precursor_lead_h > 0:
                     exp.begin_gradual_precursor(
                         ev.node, ev.time_h - ev.precursor_lead_h,
                         until_h=ev.time_h + 0.05)
+                if ev.kind in DEGRADE_KINDS and ev.window_h > 0:
+                    exp.begin_degradation(
+                        ev.node, ev.time_h, ev.time_h + ev.window_h,
+                        ev.slow_factor, ev.kind, ev.onset)
+                elif ev.kind == "ctrl_blind" and ev.window_h > 0:
+                    exp.begin_outage(ev.time_h, ev.time_h + ev.window_h)
             B.exporters[i] = exp
             if retain:
                 B.stores[i] = TimeSeriesStore(cfg.n_nodes)
             if cfg.control is not None:
-                B.planes[i] = ControlPlane(
+                plane = ControlPlane(
                     cfg.control, urgent_save_s=cfg.checkpoint_save_s)
+                plane.infra_active = B.has_infra and bool(
+                    (B.fails.kind[B.fails.offsets[i]:
+                                  B.fails.offsets[i + 1]] >= 3).any())
+                for b0, b1 in blind_windows(evs):
+                    plane.begin_blind(b0, b1)
+                B.planes[i] = plane
                 B.views[i] = _SeedView(self, B, i)
             B.tel_seeds.append(i)
 
@@ -484,7 +532,22 @@ class BatchedCampaignEngine:
             B.record_log[s].append((t0, t1, B.cur_nodes_idx[s],
                                     tuple(iso.items()) if iso else ()))
 
+    def _account_degradation(self, B: _Batch, s: int, t1: float):
+        """Close the degradation ledger for seed ``s``'s RUNNING span
+        ending at ``t1`` (mirrors `_CampaignState.account_degradation`:
+        called wherever the span closes — failure, drain, campaign end)."""
+        if not B.deg_windows[s]:
+            return
+        started = B.cur_started[s]
+        if started != started:          # NaN: never reached RUNNING
+            return
+        d = degraded_overlap_h(B.deg_windows[s], started, t1,
+                               B.cur_nodes_idx[s])
+        if d:
+            B.degraded[s].append(d)
+
     def _fail_session(self, B: _Batch, s: int, t: float, kind: str, xid):
+        self._account_degradation(B, s, t)
         B.last_hw[s] = kind == "unreachable" or (
             xid is not None and _XID_HW[xid])
         B.prev_end[s] = t
@@ -599,6 +662,12 @@ class BatchedCampaignEngine:
         cfg = self.cfg
         node = B.fnodes[j]
         kcode = B.fkind[j]
+        if kcode >= 3:
+            # infra band (net_degrade / resource_exhaust / ctrl_blind):
+            # degrade-don't-kill — the event acts via telemetry overlays,
+            # the degradation ledger and (escalating pressure) a separate
+            # crash timer; no immediate state change, no RNG draws
+            return
         if kcode == 2:                              # fail_slow
             B.isolated[s][node] = "performance degradation"
             B.excl[s, node] = True
@@ -632,8 +701,35 @@ class BatchedCampaignEngine:
             self._fail_session(B, s, t, KIND_NAMES[kcode], xid)
             self._schedule_next(B, s, t, xid=xid)
 
+    def _process_escalation(self, B: _Batch, s: int, t: float, node: int):
+        """Escalating resource-exhaustion crash for seed ``s`` (mirrors
+        `_CampaignState.process_escalation` draw for draw)."""
+        cfg = self.cfg
+        plane = B.planes[s]
+        if plane is not None \
+                and B.isolated[s].get(node) == "predictive drain":
+            plane.stats.failures_on_drained_node += 1
+        if B.cur_on[s] and B.in_gang[s, node]:
+            rng = B.rngs[s]
+            if B.cur_run[s]:
+                lost = min(t - float(B.last_save[s]),
+                           cfg.checkpoint_interval_h)
+                B.lost[s].append(lost)
+                if plane is not None:
+                    baseline = min(t - float(B.last_ckpt[s]),
+                                   cfg.checkpoint_interval_h)
+                    plane.stats.lost_work_avoided_h += \
+                        max(baseline - lost, 0.0)
+            if rng.random() < cfg.p_software_failure:
+                B.struct_until[s] = max(
+                    B.struct_until[s],
+                    t + rng.exponential(cfg.structural_fix_mean_h))
+            self._fail_session(B, s, t, "resource_exhaust", None)
+            self._schedule_next(B, s, t)
+
     def _drain_session(self, B: _Batch, s: int, t: float, node: int, *,
                        redeploy_h: float, recheck_h: float):
+        self._account_degradation(B, s, t)
         B.prev_end[s] = t
         started = B.cur_started[s]
         if started == started:
@@ -754,8 +850,10 @@ class BatchedCampaignEngine:
         duration = cfg.duration_h
         interval = cfg.checkpoint_interval_h
         ftimes, foffs = B.ftimes, fails.offsets
-        cand = np.empty((5, B.S))
+        cand = np.empty((7, B.S))
         cand[0] = duration
+        cand[5] = np.inf        # escalation crashes (infra band)
+        cand[6] = np.inf        # blind-window wake-ups (control only)
         rep_min = B.rep_min
 
         # NaN pending-times flow through the candidate comparisons by
@@ -791,11 +889,15 @@ class BatchedCampaignEngine:
                 rep_min[due_rep] = B.repair[due_rep].min(axis=1)
 
             # 2. control plane: execute pending drains at chunk boundaries
+            # and replay decisions queued during blind windows (the scalar
+            # loop calls ``ctl.process`` unconditionally; both paths are
+            # no-ops without a pending drain or a due blind queue)
             if telemetry:
                 for s in B.tel_seeds:
                     plane = B.planes[s]
                     if plane is not None and alive[s] \
-                            and plane.pending_drain is not None:
+                            and (plane.pending_drain is not None
+                                 or plane.blind_ready(t_list[s])):
                         plane.process(t_list[s], B.views[s])
 
             # 3. pending attempt starts (stacked pool scan + per-seed rng)
@@ -826,6 +928,18 @@ class BatchedCampaignEngine:
             if len(due_fail):        # failures schedule repairs/isolations
                 rep_min[due_fail] = B.repair[due_fail].min(axis=1)
 
+            # 5b. escalation crashes from resource-exhaustion windows
+            # (processed after the failures due at t, like the scalar loop)
+            due_esc = (alive & (B.next_esc <= t + 1e-12)).nonzero()[0]
+            for s in due_esc.tolist():
+                es, p = B.esc_list[s], B.esc_ptr[s]
+                ts_ = t_list[s]
+                while p < len(es) and es[p][0] <= ts_ + 1e-12:
+                    self._process_escalation(B, s, ts_, es[p][1])
+                    p += 1
+                B.esc_ptr[s] = p
+                B.next_esc[s] = es[p][0] if p < len(es) else np.inf
+
             # 6. next event horizon, per seed.  NaN pending (= no queued
             # attempt) propagates into the min and is rinsed by the
             # isfinite fallback, exactly like the scalar candidate filter.
@@ -834,6 +948,21 @@ class BatchedCampaignEngine:
             cand[2] = np.where(B.cur_on, np.inf, B.pend)
             cand[3] = np.where(preparing, B.prep_until, np.inf)
             cand[4] = B.next_fail
+            cand[5] = B.next_esc
+            if B.has_infra and B.has_control:
+                # wake at blind-window ends so queued decisions replay
+                # (span boundaries must break there exactly like the
+                # scalar candidate list — emission chunking feeds the
+                # exporter rng, so the horizons must match bit for bit)
+                due_bl = (alive & (B.next_blind <= t + 1e-12)).nonzero()[0]
+                for s in due_bl.tolist():
+                    bl, p = B.blind_list[s], B.blind_ptr[s]
+                    ts_ = t_list[s]
+                    while p < len(bl) and bl[p] <= ts_ + 1e-12:
+                        p += 1
+                    B.blind_ptr[s] = p
+                    B.next_blind[s] = bl[p] if p < len(bl) else np.inf
+                cand[6] = B.next_blind
             masked = np.where(cand <= t[None, :] + 1e-12, np.inf, cand)
             t_next = np.nanmin(masked, axis=0)
             t_next = np.where(np.isfinite(t_next), t_next, duration)
@@ -868,6 +997,7 @@ class BatchedCampaignEngine:
     def _finalize_seed(self, B: _Batch, s: int):
         duration = self.cfg.duration_h
         if B.cur_on[s]:
+            self._account_degradation(B, s, duration)
             self._record_session(B, s, B.cur_created[s], duration)
             started = B.cur_started[s]
             if started == started:
@@ -928,7 +1058,8 @@ class BatchedCampaignEngine:
             checkpoint_events=int(B.ckpt_events[i]),
             lost_hours=B.lost[i], duration_h=cfg.duration_h,
             checkpoint_save_s=cfg.checkpoint_save_s,
-            control=plane.stats if plane is not None else None)
+            control=plane.stats if plane is not None else None,
+            degraded_hours=B.degraded[i])
 
     def _findings(self, B: _Batch, i: int) -> dict:
         """`repro.ops.sweep.compute_findings` without the object graph —
@@ -956,7 +1087,12 @@ class BatchedCampaignEngine:
         ckpt_h = int(B.ckpt_events[i]) * cfg.checkpoint_save_s / 3600.0
         plane = B.planes[i]
         urgent_h = plane.stats.urgent_save_h if plane is not None else 0.0
-        goodput_h = run - float(np.sum(lost)) - ckpt_h - urgent_h
+        # degraded hours are subtracted LAST, matching
+        # `CampaignResult.goodput_h`'s float fold order exactly
+        deg_h = float(np.sum(B.degraded[i]))
+        goodput_h = run - float(np.sum(lost)) - ckpt_h - urgent_h - deg_h
+        o0, o1 = int(B.fails.offsets[i]), int(B.fails.offsets[i + 1])
+        infra_n = int((B.fails.kind[o0:o1] >= 3).sum())
         out = {
             "occupancy": min(run / duration, 1.0),
             "goodput": max(goodput_h, 0.0) / duration,
@@ -972,6 +1108,8 @@ class BatchedCampaignEngine:
             "f4_gap_median_min": float(np.median(gaps)) if gaps else None,
             "f4_auto_downtime_h": float(np.median(autos)) if autos else None,
             "f4_manual_downtime_h": float(np.median(mans)) if mans else None,
+            "infra_n_events": float(infra_n),
+            "infra_degraded_h": deg_h,
         }
         if plane is not None:
             ctl = plane.stats.summarize(B.fails.events(i), duration)

@@ -40,7 +40,10 @@ from repro.checkpoint.youngdaly import MTBF_H_PAPER
 from repro.control.policy import ControlConfig, ControlPlane, ControlStats
 from repro.core.exclusion import ExclusionTracker
 from repro.storage.fabric import FabricConfig, StorageFabric
-from repro.core.failures import FailureEvent, FailureInjector
+from repro.core.failures import (DEGRADE_KINDS, FailureEvent,
+                                 FailureInjector, INFRA_KINDS,
+                                 blind_windows, degradation_windows,
+                                 degraded_overlap_h, escalation_events)
 from repro.core.retry import Attempt, Chain, RetryConfig, RetryEngine
 from repro.core.scheduler import GangScheduler
 from repro.core.session import Session, SessionState
@@ -129,6 +132,9 @@ class CampaignResult:
     checkpoint_save_s: float = 18.0          # resolved save cost (fabric-
                                              #   priced when storage is set)
     control: Optional[ControlStats] = None   # detection->recovery ledger
+    degraded_hours: List[float] = field(default_factory=list)
+                                             # per session: effective hours
+                                             #   lost to degrade-band windows
 
     def training_occupancy(self) -> float:
         run = sum(s.elapsed_running_h(self.duration_h) for s in self.sessions
@@ -137,15 +143,18 @@ class CampaignResult:
 
     def goodput_h(self) -> float:
         """Productive training hours: RUNNING wall time minus redone (lost)
-        work minus checkpoint-save overhead (scheduled + urgent).  This is
-        the quantity the proactive control plane trades on: urgent saves
-        spend save time to shrink the lost-work window; drains spend a
-        controlled restart to dodge a crash."""
+        work minus checkpoint-save overhead (scheduled + urgent) minus the
+        effective hours eaten by degrade-band windows (a degraded gang
+        still runs, just slower).  This is the quantity the proactive
+        control plane trades on: urgent saves spend save time to shrink
+        the lost-work window; drains spend a controlled restart to dodge
+        a crash."""
         run = sum(s.elapsed_running_h(self.duration_h) for s in self.sessions
                   if s.n_nodes > 1)
         ckpt_h = self.checkpoint_events * self.checkpoint_save_s / 3600.0
         urgent_h = self.control.urgent_save_h if self.control else 0.0
-        return run - float(np.sum(self.lost_hours)) - ckpt_h - urgent_h
+        return run - float(np.sum(self.lost_hours)) - ckpt_h - urgent_h \
+            - float(np.sum(self.degraded_hours))
 
     def goodput(self) -> float:
         """Goodput as a fraction of the campaign wall clock."""
@@ -196,6 +205,10 @@ class _CampaignState:
         self.down_kind = "failure"               # "failure" | "drain"
         self.last_fail_hardware = False
         self.control: Optional[ControlPlane] = None
+        # degrade-band ledger: windows from the sampled schedule, and the
+        # per-session effective hours they cost (closed in event order)
+        self.deg_windows: List[tuple] = []
+        self.degraded: List[float] = []
 
     # -- attempt lifecycle --------------------------------------------------
 
@@ -239,7 +252,20 @@ class _CampaignState:
         self.prepare_until = t + dur
         return True
 
+    def account_degradation(self, t1: float):
+        """Close the degradation ledger for the current session's RUNNING
+        span ending at ``t1`` (called wherever the span closes: failure,
+        drain, or campaign end)."""
+        cur = self.current
+        if cur is None or cur.started_h is None or not self.deg_windows:
+            return
+        d = degraded_overlap_h(self.deg_windows, cur.started_h, t1,
+                               cur.nodes)
+        if d:
+            self.degraded.append(d)
+
     def fail_session(self, t: float, kind: str, xid=None):
+        self.account_degradation(t)
         self.last_fail_hardware = kind == "unreachable" or (
             xid is not None and XID_TABLE[xid].hardware)
         att = self.chain.attempts[-1]
@@ -357,6 +383,12 @@ class _CampaignState:
 
     def process_failure(self, t: float, ev: FailureEvent):
         cfg, rng = self.cfg, self.rng
+        if ev.kind in INFRA_KINDS:
+            # degrade-don't-kill: the event opens a window that acts via
+            # telemetry overlays, the degradation ledger and (for
+            # escalating pressure) a separate crash timer — no immediate
+            # state change and, critically, no RNG draws here
+            return
         if ev.kind == "fail_slow":
             self.isolated[ev.node] = "performance degradation"
             self.sched.exclude(ev.node, t, "fail-slow (deliberate isolation)")
@@ -393,6 +425,32 @@ class _CampaignState:
             self.fail_session(t, ev.kind, xid=ev.xid)
             self.schedule_next(t, xid=ev.xid)
 
+    def process_escalation(self, t: float, node: int):
+        """An escalating resource-exhaustion window ends in a process-level
+        crash: the node's runtime dies (no hardware isolation — the host
+        recovers once the pressure source is gone) and takes the gang down
+        if the node is in the current job."""
+        cfg, rng = self.cfg, self.rng
+        if self.control is not None \
+                and self.isolated.get(node) == "predictive drain":
+            self.control.stats.failures_on_drained_node += 1
+        if self.current is not None and not self.current.is_terminal \
+                and node in self.current.nodes:
+            if self.current.state is SessionState.RUNNING:
+                lost = min(t - self.last_save, cfg.checkpoint_interval_h)
+                self.lost_hours.append(lost)
+                if self.control is not None:
+                    baseline = min(t - self.last_ckpt,
+                                   cfg.checkpoint_interval_h)
+                    self.control.stats.lost_work_avoided_h += \
+                        max(baseline - lost, 0.0)
+            if rng.random() < cfg.p_software_failure:
+                self.structural_until = max(
+                    self.structural_until,
+                    t + rng.exponential(cfg.structural_fix_mean_h))
+            self.fail_session(t, "resource_exhaust")
+            self.schedule_next(t)
+
     def drain_session(self, t: float, node: int, *, redeploy_h: float,
                       recheck_h: float):
         """Predictive drain (control plane): gracefully stop the session
@@ -400,6 +458,7 @@ class _CampaignState:
         recheck, and redeploy the gang from the remaining pool.  Not a
         failure: the chain closes with a drain reason and the next chain
         starts automatically after the controlled handoff."""
+        self.account_degradation(t)
         s = self.current
         att = self.chain.attempts[-1]
         att.end_h = t
@@ -426,6 +485,7 @@ class _CampaignState:
     def finalize(self, failures, store) -> CampaignResult:
         cfg = self.cfg
         if self.current is not None and not self.current.is_terminal:
+            self.account_degradation(cfg.duration_h)
             self.exclusions.record_session(self.current.created_h,
                                            cfg.duration_h,
                                            self.current.nodes,
@@ -438,7 +498,8 @@ class _CampaignState:
             downtimes=self.downtimes, checkpoint_events=self.ckpt_events,
             lost_hours=self.lost_hours, duration_h=cfg.duration_h,
             checkpoint_save_s=cfg.checkpoint_save_s,
-            control=self.control.stats if self.control is not None else None)
+            control=self.control.stats if self.control is not None else None,
+            degraded_hours=self.degraded)
 
 
 class _TelemetryBatcher:
@@ -472,6 +533,8 @@ class _TelemetryBatcher:
         self.pending_sigs: List[Tuple[int, FailureEvent]] = []
 
     def add_failure_signature(self, ev: FailureEvent):
+        if ev.kind in INFRA_KINDS:
+            return      # window signatures are registered at setup
         k = int(np.ceil(ev.time_h / TICK_H - 1e-9))
         if k < self.n_ticks_total:
             self.pending_sigs.append((k, ev))
@@ -593,6 +656,12 @@ class ClusterSim:
                 exporters.begin_gradual_precursor(
                     ev.node, ev.time_h - ev.precursor_lead_h,
                     until_h=ev.time_h + 0.05)
+            if ev.kind in DEGRADE_KINDS and ev.window_h > 0:
+                exporters.begin_degradation(
+                    ev.node, ev.time_h, ev.time_h + ev.window_h,
+                    ev.slow_factor, ev.kind, ev.onset)
+            elif ev.kind == "ctrl_blind" and ev.window_h > 0:
+                exporters.begin_outage(ev.time_h, ev.time_h + ev.window_h)
         return exporters, store
 
     def run(self) -> CampaignResult:
@@ -611,6 +680,13 @@ class ClusterSim:
         st = _CampaignState(cfg, self.rng)
         failures = self._make_injector().sample(cfg.duration_h)
         fail_idx = 0
+        # infra fault band timelines (all derived deterministically from
+        # the schedule — shared helpers keep both engines bit-identical)
+        st.deg_windows = degradation_windows(failures)
+        escs = escalation_events(failures)
+        esc_idx = 0
+        blind_ends = [b1 for _, b1 in blind_windows(failures)]
+        blind_idx = 0
         exporters, store = self._make_telemetry(failures)
         ctl = None
         if cfg.control is not None:
@@ -618,6 +694,9 @@ class ClusterSim:
             # the gang fanin when CampaignConfig.storage is set
             ctl = ControlPlane(cfg.control,
                                urgent_save_s=cfg.checkpoint_save_s)
+            ctl.infra_active = any(f.kind in INFRA_KINDS for f in failures)
+            for b0, b1 in blind_windows(failures):
+                ctl.begin_blind(b0, b1)
             st.control = ctl
         # only drains need a bounded alarm->action latency (they truncate
         # spans); urgent checkpoints apply retroactively at the alarm's own
@@ -644,6 +723,10 @@ class ClusterSim:
                 if tel is not None:
                     tel.add_failure_signature(ev)
                 st.process_failure(t, ev)
+            while esc_idx < len(escs) and escs[esc_idx][0] <= t + 1e-12:
+                _, node = escs[esc_idx]
+                esc_idx += 1
+                st.process_escalation(t, node)
 
             # ---- next event time ----
             cands = [cfg.duration_h]
@@ -656,6 +739,15 @@ class ClusterSim:
                 cands.append(st.prepare_until)
             if fail_idx < len(failures):
                 cands.append(failures[fail_idx].time_h)
+            if esc_idx < len(escs):
+                cands.append(escs[esc_idx][0])
+            if ctl is not None:
+                # wake at blind-window ends so queued decisions replay
+                while blind_idx < len(blind_ends) \
+                        and blind_ends[blind_idx] <= t + 1e-12:
+                    blind_idx += 1
+                if blind_idx < len(blind_ends):
+                    cands.append(blind_ends[blind_idx])
             t_next = min(c for c in cands if c > t + 1e-12) \
                 if any(c > t + 1e-12 for c in cands) else cfg.duration_h
             t_next = min(t_next, cfg.duration_h)
@@ -688,6 +780,9 @@ class ClusterSim:
         failures = self._make_injector().sample(cfg.duration_h)
         fail_iter = iter(failures)
         next_fail = next(fail_iter, None)
+        st.deg_windows = degradation_windows(failures)
+        esc_iter = iter(escalation_events(failures))
+        next_esc = next(esc_iter, None)
         exporters, store = self._make_telemetry(failures)
 
         t = 0.0
@@ -709,6 +804,9 @@ class ClusterSim:
                 next_fail = next(fail_iter, None)
             for ev in fired:
                 st.process_failure(t, ev)
+            while next_esc is not None and next_esc[0] <= t:
+                st.process_escalation(t, next_esc[1])
+                next_esc = next(esc_iter, None)
 
             if exporters is not None and store is not None:
                 cur = st.current

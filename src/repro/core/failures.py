@@ -28,6 +28,15 @@ P_FAIL_SLOW = 0.233                 # "Others": perf degradation etc.
 
 MTBF_HOURS = 56.2                   # paper Table 11
 
+# cluster-infrastructure fault band (degrade-don't-kill; opt-in via
+# ``kind_weights`` — the paper's Table 2 mix carries zero weight for these,
+# calibration anchors are Meta's research-cluster category rates):
+# base rates relative to the Table 2 mix mass, scaled by w[name] (default 0)
+P_NET_DEGRADE = 0.08                # network latency/loss windows
+P_RESOURCE_EXHAUST = 0.06           # host memory / ephemeral-disk pressure
+P_CTRL_BLIND = 0.03                 # scheduler / control-plane outages
+P_RESOURCE_ESCALATE = 0.35          # pressure windows that end in a crash
+
 # scenario-facing failure categories (ops/scenario.py tilts these weights)
 CATEGORY_OF_XID = {
     145: "nvlink", 149: "nvlink",
@@ -37,24 +46,38 @@ CATEGORY_OF_XID = {
     31: "app", 43: "app",
 }
 FAILURE_CATEGORIES = frozenset(CATEGORY_OF_XID.values()) \
-    | {"unreachable", "fail_slow"}
+    | {"unreachable", "fail_slow",
+       "net_degrade", "resource_exhaust", "ctrl_blind"}
+
+# the degrade-don't-kill band: faults that open a window instead of
+# killing a session outright
+DEGRADE_KINDS = frozenset({"net_degrade", "resource_exhaust"})
+INFRA_KINDS = DEGRADE_KINDS | {"ctrl_blind"}
 
 
 @dataclass
 class FailureEvent:
     time_h: float                   # hours since campaign start
     node: int
-    kind: str                       # "xid" | "unreachable" | "fail_slow"
+    kind: str                       # KIND_NAMES entry
     xid: Optional[int] = None
     # precursor signature
     precursor_lead_h: float = 0.0   # >0: signals degrade before the XID
-    slow_factor: float = 1.0        # fail-slow: relative step-time multiplier
+    slow_factor: float = 1.0        # fail-slow / degrade severity multiplier
+    # infra fault band: degradation / outage window geometry
+    window_h: float = 0.0           # >0: event opens a [t, t+window_h) window
+    onset: str = ""                 # "" | "gradual" | "spike"
+    escalate: bool = False          # resource window ends in a process crash
 
     @property
     def is_hardware(self) -> bool:
         from repro.core.xid import XID_TABLE
         return self.kind == "unreachable" or (
             self.xid is not None and XID_TABLE[self.xid].hardware)
+
+    @property
+    def is_degrade(self) -> bool:
+        return self.kind in DEGRADE_KINDS
 
 
 @dataclass
@@ -110,6 +133,9 @@ class FailureInjector:
         kinds, probs = self._mix()
         kind_is_xid = np.array([k[0] == "xid" for k in kinds])
         kind_is_slow = np.array([k[0] == "fail_slow" for k in kinds])
+        kind_is_net = np.array([k[0] == "net_degrade" for k in kinds])
+        kind_is_res = np.array([k[0] == "resource_exhaust" for k in kinds])
+        kind_is_blind = np.array([k[0] == "ctrl_blind" for k in kinds])
         kind_xid = np.array([k[1] if k[1] is not None else -1
                              for k in kinds], dtype=np.int64)
         from repro.core.xid import XID_TABLE
@@ -135,7 +161,8 @@ class FailureInjector:
             if k == 0:
                 cols.append((times, np.empty(0, np.int64),
                              np.empty(0, np.int64), np.empty(0),
-                             np.empty(0)))
+                             np.empty(0), np.empty(0),
+                             np.empty(0, np.int8), np.empty(0, bool)))
                 continue
             nodes = rng.choice(self.n_nodes, size=k, p=hazard)
             kind_idx = rng.choice(len(kinds), size=k, p=probs)
@@ -147,7 +174,29 @@ class FailureInjector:
             slows = np.where(is_slow,
                              rng.uniform(1.15, 1.6, k),
                              1.0)
-            cols.append((times, nodes, kind_idx, leads, slows))
+            # infra fault band draws — appended AFTER the historical draw
+            # sequence so pre-existing schedules stay bit-identical
+            win_u = rng.random(k)
+            sev_u = rng.random(k)
+            onset_u = rng.random(k)
+            esc_u = rng.random(k)
+            is_net = kind_is_net[kind_idx]
+            is_res = kind_is_res[kind_idx]
+            is_blind = kind_is_blind[kind_idx]
+            windows = np.where(
+                is_net, 0.5 + 1.5 * win_u,
+                np.where(is_res, 1.0 + 2.0 * win_u,
+                         np.where(is_blind, 0.25 + 0.75 * win_u, 0.0)))
+            slows = np.where(is_net, 1.2 + 0.6 * sev_u,
+                             np.where(is_res, 1.3 + 0.7 * sev_u, slows))
+            onset = np.where(is_res, np.where(onset_u < 0.5, 1, 2),
+                             np.where(is_net, 2, 0)).astype(np.int8)
+            escalate = is_res & (esc_u < P_RESOURCE_ESCALATE)
+            windows = self._clip_windows(times, nodes, windows,
+                                         is_net | is_res, is_blind,
+                                         duration_h)
+            cols.append((times, nodes, kind_idx, leads, slows,
+                         windows, onset, escalate))
 
         counts = [len(c[0]) for c in cols]
         offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
@@ -157,17 +206,42 @@ class FailureInjector:
                 seeds=list(seeds), offsets=offsets, times=empty_f,
                 nodes=np.empty(0, np.int64), kind=np.empty(0, np.int8),
                 xid=np.empty(0, np.int64), hardware=np.empty(0, bool),
-                leads=empty_f, slows=empty_f)
+                leads=empty_f, slows=empty_f, windows=np.empty(0),
+                onset=np.empty(0, np.int8), escalate=np.empty(0, bool))
         times = np.concatenate([c[0] for c in cols if len(c[0])])
         nodes = np.concatenate([c[1] for c in cols if len(c[0])])
         kind_idx = np.concatenate([c[2] for c in cols if len(c[0])])
         leads = np.concatenate([c[3] for c in cols if len(c[0])])
         slows = np.concatenate([c[4] for c in cols if len(c[0])])
+        windows = np.concatenate([c[5] for c in cols if len(c[0])])
+        onset = np.concatenate([c[6] for c in cols if len(c[0])])
+        escalate = np.concatenate([c[7] for c in cols if len(c[0])])
         return FailureBatch(
             seeds=list(seeds), offsets=offsets, times=times,
             nodes=nodes.astype(np.int64), kind=kind_code[kind_idx],
             xid=kind_xid[kind_idx], hardware=kind_hw[kind_idx],
-            leads=leads, slows=slows)
+            leads=leads, slows=slows, windows=windows,
+            onset=onset.astype(np.int8), escalate=escalate.astype(bool))
+
+    @staticmethod
+    def _clip_windows(times, nodes, windows, is_deg, is_blind, duration_h):
+        """Deterministic (draw-free) window clipping: a degradation window
+        ends no later than the next window-bearing event on the same node
+        (per-node non-overlap), a blind window no later than the next blind
+        window (the control plane is a single global resource), and every
+        window ends by the campaign horizon."""
+        k = len(times)
+        deg_idx = np.nonzero(is_deg)[0]
+        for a, j in enumerate(deg_idx):
+            for j2 in deg_idx[a + 1:]:
+                if nodes[j2] == nodes[j]:
+                    windows[j] = min(windows[j], times[j2] - times[j])
+                    break
+        blind_idx = np.nonzero(is_blind)[0]
+        for a, b in zip(blind_idx, blind_idx[1:]):
+            windows[a] = min(windows[a], times[b] - times[a])
+        return np.where(windows > 0,
+                        np.minimum(windows, duration_h - times), 0.0)
 
     def _mix(self):
         kinds = []
@@ -180,13 +254,25 @@ class FailureInjector:
         probs.append(P_MACHINE_UNREACHABLE * w.get("unreachable", 1.0))
         kinds.append(("fail_slow", None))
         probs.append(P_FAIL_SLOW * w.get("fail_slow", 1.0))
+        # infra fault band: zero-weight by default (appending zero-mass
+        # entries does not perturb `Generator.choice` draws, so existing
+        # seeds keep their exact schedules)
+        kinds.append(("net_degrade", None))
+        probs.append(P_NET_DEGRADE * w.get("net_degrade", 0.0))
+        kinds.append(("resource_exhaust", None))
+        probs.append(P_RESOURCE_EXHAUST * w.get("resource_exhaust", 0.0))
+        kinds.append(("ctrl_blind", None))
+        probs.append(P_CTRL_BLIND * w.get("ctrl_blind", 0.0))
         probs = np.asarray(probs)
         return kinds, probs / probs.sum()
 
 
-# kind codes used by the stacked schedule (FailureBatch.kind)
-KIND_NAMES = ("xid", "unreachable", "fail_slow")
+# kind codes used by the stacked schedule (FailureBatch.kind); codes >= 3
+# are the degrade-don't-kill infra band
+KIND_NAMES = ("xid", "unreachable", "fail_slow",
+              "net_degrade", "resource_exhaust", "ctrl_blind")
 _KIND_CODES = {name: i for i, name in enumerate(KIND_NAMES)}
+ONSET_NAMES = ("", "gradual", "spike")
 
 
 @dataclass
@@ -206,7 +292,10 @@ class FailureBatch:
     xid: np.ndarray                # (K,) int64, -1 = none
     hardware: np.ndarray           # (K,) bool
     leads: np.ndarray              # (K,) precursor lead hours
-    slows: np.ndarray              # (K,) fail-slow step-time factor
+    slows: np.ndarray              # (K,) fail-slow / degrade severity
+    windows: np.ndarray            # (K,) degradation/outage window hours
+    onset: np.ndarray              # (K,) int8 — index into ONSET_NAMES
+    escalate: np.ndarray           # (K,) bool — window ends in a crash
     _cache: Dict[int, List[FailureEvent]] = field(default_factory=dict,
                                                   repr=False)
 
@@ -228,6 +317,65 @@ class FailureBatch:
                              xid=int(self.xid[j]) if self.xid[j] >= 0
                              else None,
                              precursor_lead_h=float(self.leads[j]),
-                             slow_factor=float(self.slows[j]))
+                             slow_factor=float(self.slows[j]),
+                             window_h=float(self.windows[j]),
+                             onset=ONSET_NAMES[self.onset[j]],
+                             escalate=bool(self.escalate[j]))
                 for j in range(a, b)]
         return self._cache[i]
+
+
+# ---------------------------------------------------------------------------
+# shared window geometry — the single source of truth both campaign engines
+# (scalar ClusterSim and BatchedCampaignEngine) evaluate, so their degraded-
+# hours ledgers and escalation/blind timelines are bit-identical
+# ---------------------------------------------------------------------------
+
+def onset_progress(ts, t0: float, t1: float, onset: str) -> np.ndarray:
+    """Severity progress in [0, 1] on the half-open window [t0, t1).
+
+    ``gradual`` ramps linearly over the first half of the window then
+    plateaus (monotone nondecreasing within the window); ``spike`` jumps
+    straight to 1.  Outside the window the progress is 0."""
+    ts = np.asarray(ts, dtype=float)
+    active = (ts >= t0) & (ts < t1)
+    if onset == "gradual":
+        ramp = max((t1 - t0) * 0.5, 1e-9)
+        prog = np.minimum((ts - t0) / ramp, 1.0)
+    else:
+        prog = np.ones_like(ts)
+    return np.where(active, prog, 0.0)
+
+
+def degradation_windows(events: Sequence[FailureEvent]):
+    """(node, t0, t1, severity, kind, onset) per degrade-band event."""
+    return [(ev.node, ev.time_h, ev.time_h + ev.window_h, ev.slow_factor,
+             ev.kind, ev.onset)
+            for ev in events if ev.kind in DEGRADE_KINDS]
+
+
+def escalation_events(events: Sequence[FailureEvent]):
+    """(crash_time_h, node), time-sorted, for escalating pressure windows."""
+    return sorted((ev.time_h + ev.window_h, ev.node)
+                  for ev in events
+                  if ev.kind == "resource_exhaust" and ev.escalate)
+
+
+def blind_windows(events: Sequence[FailureEvent]):
+    """(t0, t1) per control-plane outage, in schedule order."""
+    return [(ev.time_h, ev.time_h + ev.window_h)
+            for ev in events if ev.kind == "ctrl_blind"]
+
+
+def degraded_overlap_h(windows, t0: float, t1: float, nodes) -> float:
+    """Effective training hours lost to degradation windows overlapping a
+    session's [t0, t1) run span on its gang nodes: overlap * (1 - 1/sev)
+    at plateau severity (the ramp is a telemetry shape, not an accounting
+    term — keeping the ledger a closed form both engines share)."""
+    total = 0.0
+    for node, w0, w1, sev, _kind, _onset in windows:
+        if node in nodes:
+            ov = min(t1, w1) - max(t0, w0)
+            if ov > 0.0:
+                total += ov * (1.0 - 1.0 / sev)
+    return total

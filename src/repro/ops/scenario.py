@@ -335,12 +335,59 @@ PRESETS: Dict[str, Scenario] = {s.name: s for s in [
                     "occasional false-positive drain).",
         control_plane=True,
         control_drain=True),
+    Scenario(
+        name="infra-faults",
+        description="Cluster-infrastructure fault band: network-degradation "
+                    "windows (gang-wide collective slowdown), resource-"
+                    "exhaustion windows (host pressure, sometimes escalating "
+                    "to a crash) and control-plane blind windows (scheduler "
+                    "outages that queue decisions), on top of the paper "
+                    "mix.  The control plane classifies alarms and throttles "
+                    "net windows instead of draining healthy nodes.",
+        kind_weights={"net_degrade": 4.0, "resource_exhaust": 4.0,
+                      "ctrl_blind": 4.0},
+        control_plane=True),
+    Scenario(
+        name="degraded-network",
+        description="Network-degradation-dominated band: latency/loss "
+                    "windows inflate collective step time and StorageFabric "
+                    "RPC service; the detector sees transport backlog / RPC "
+                    "queue signatures and the control plane throttles "
+                    "(waits the window out) instead of urgent-saving.",
+        kind_weights={"net_degrade": 8.0},
+        control_plane=True),
+    Scenario(
+        name="resource-pressure",
+        description="Resource-exhaustion-dominated band: gradual or spike "
+                    "host memory/disk pressure slows nodes and sometimes "
+                    "escalates to a process crash; confirmed alarms drain "
+                    "the pressured node behind a final checkpoint before "
+                    "the escalation lands.",
+        kind_weights={"resource_exhaust": 8.0},
+        control_plane=True,
+        control_drain=True),
+    Scenario(
+        name="ops-blind-spots",
+        description="Scheduler-outage band: control-plane blind windows "
+                    "queue alarm decisions until visibility returns (the "
+                    "outage cost is exactly that latency), layered over "
+                    "resource-pressure windows that keep raising alarms.",
+        kind_weights={"ctrl_blind": 8.0, "resource_exhaust": 4.0},
+        control_plane=True),
 ]}
 
 
 def get_scenario(name: str) -> Scenario:
+    """Resolve a preset by name, as a fresh deep copy.
+
+    Presets carry mutable fields (``kind_weights``, ``overrides``); handing
+    out the registry instance would let one caller's mutation leak into
+    every later ``get_scenario`` of the same name.  The dict round-trip is
+    the same canonical form sweeps ship across process boundaries, so the
+    copy is also a per-lookup serialization check.
+    """
     try:
-        return PRESETS[name]
+        return Scenario.from_dict(PRESETS[name].to_dict())
     except KeyError:
         raise KeyError(f"unknown scenario {name!r}; available: "
                        f"{', '.join(sorted(PRESETS))}") from None

@@ -31,6 +31,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.cluster import ClusterSim
+from repro.core.failures import INFRA_KINDS
 from repro.core.retry import chain_stats
 from repro.ops.scenario import Scenario, get_scenario
 
@@ -80,6 +81,11 @@ def compute_findings(res) -> Dict[str, Optional[float]]:
         "f4_gap_median_min": st["gap_median_min"],
         "f4_auto_downtime_h": float(np.median(autos)) if autos else None,
         "f4_manual_downtime_h": float(np.median(mans)) if mans else None,
+        # infra fault band: degrade-don't-kill events and the effective
+        # hours their windows ate (always present, 0.0 without the band)
+        "infra_n_events": float(sum(1 for f in res.failures
+                                    if f.kind in INFRA_KINDS)),
+        "infra_degraded_h": float(np.sum(res.degraded_hours)),
     }
     if res.control is not None:
         ctl = res.control.summarize(res.failures, res.duration_h)
@@ -247,6 +253,7 @@ class SweepResult:
         ("f4_gap_median_min", "gap min", lambda v: f"{v:.0f}"),
         ("f4_auto_downtime_h", "auto dt h", lambda v: f"{v:.1f}"),
         ("f4_manual_downtime_h", "manual dt h", lambda v: f"{v:.1f}"),
+        ("infra_degraded_h", "deg h", lambda v: f"{v:.1f}"),
     ]
 
     def comparison_rows(self) -> List[List[str]]:
@@ -329,6 +336,7 @@ class SweepResult:
         ("f4_gap_median_min", "F4 gap min", 1.0, "{:.1f}"),
         ("f4_auto_downtime_h", "auto dt h", 1.0, "{:.2f}"),
         ("f4_manual_downtime_h", "manual dt h", 1.0, "{:.2f}"),
+        ("infra_degraded_h", "deg h", 1.0, "{:.2f}"),
     ]
 
     # distributional columns render from this many seeds up (below that,

@@ -245,6 +245,15 @@ class StorageFabric:
                 / max(int(fanin), 1)
             out[f"{tag}_queue_depth"] = float(depth)
             out[f"{tag}_backlog_bytes"] = float(depth * _std_rpc_bytes(op))
+        # network-degradation windows: a latency/loss window multiplies a
+        # client's RPC service times the way ``cfg.degradation`` does, so
+        # its ambient (non-burst) traffic queues proportionally deeper.
+        # These are the per-unit-severity telemetry deltas the exporter
+        # overlays on an affected node (~25% of the burst-level queue:
+        # background NFS traffic vs a full checkpoint load)
+        amb = 0.25 * out["load_queue_depth"]
+        out["degrade_queue_depth"] = float(amb)
+        out["degrade_backlog_bytes"] = float(amb * _std_rpc_bytes("read"))
         return out
 
     # ------------------------------------------------------------------

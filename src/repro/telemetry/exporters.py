@@ -25,7 +25,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.failures import FailureEvent
+from repro.core.failures import FailureEvent, onset_progress
 from repro.storage.fabric import StorageFabric
 from repro.telemetry.registry import MetricMeta, MetricRegistry
 
@@ -155,12 +155,25 @@ class ExporterSuite:
         self.remap_corr = np.zeros(n_nodes)
         self.remap_uncorr = np.zeros(n_nodes)
         self.accel_nodes: Dict[int, tuple] = {}   # node -> (onset_h, until_h)
+        # infra fault band windows (registered at campaign setup)
+        self.degradations: List[tuple] = []   # (node, t0, t1, sev, kind,
+                                              #  onset)
+        self.outages: List[tuple] = []        # (t0, t1) control-plane blind
 
     # -- failure signature hooks (called by the cluster sim) ---------------
 
     def begin_gradual_precursor(self, node: int, t_h: float,
                                 until_h: float = float("inf")):
         self.accel_nodes[node] = (t_h, until_h)
+
+    def begin_degradation(self, node: int, t0_h: float, t1_h: float,
+                          severity: float, kind: str, onset: str):
+        """Register a degrade-band window ([t0, t1), net/resource kind)."""
+        self.degradations.append((node, t0_h, t1_h, severity, kind, onset))
+
+    def begin_outage(self, t0_h: float, t1_h: float):
+        """Register a control-plane blind window (scheduler outage)."""
+        self.outages.append((t0_h, t1_h))
 
     # -- single-tick compatibility wrapper ---------------------------------
 
@@ -288,6 +301,46 @@ class ExporterSuite:
             v["DCGM_FI_DEV_POWER_USAGE"][:, node] += 60.0 * prog
             v["DCGM_FI_DEV_SM_CLOCK"][:, node] -= 30.0 * prog
             v["backendai_rpc_latency_ms"][:, node] += 4.0 * prog
+
+        # degrade-band windows: deterministic overlays on the drawn arrays
+        # (no extra RNG, so campaigns without infra faults stay bit-
+        # identical).  Each kind deviates >= 5 node-local metrics so the
+        # detector's min_signals vote can fire; gang-wide components are
+        # uniform across nodes, which peer z-scoring is deliberately
+        # silent on (attribution needs the node-local signals)
+        for node, d0, d1, sev, kind, onset in self.degradations:
+            prog = onset_progress(ts, d0, d1, onset)
+            if not prog.any():
+                continue
+            sevx = (sev - 1.0) * prog * up[:, node]
+            if kind == "net_degrade":
+                qd = lv.get("degrade_queue_depth", 60.0)
+                bb = lv.get("degrade_backlog_bytes", 2e7)
+                v["node_mountstats_nfs_rpc_queue_depth"][:, node] += \
+                    qd * sevx
+                v["node_netstat_Tcp_transport_backlog_bytes"][:, node] += \
+                    bb * sevx
+                v["backendai_rpc_latency_ms"][:, node] += 50.0 * sevx
+                v["node_sockstat_TCP_alloc"][:, node] += 400.0 * sevx
+                v["node_mountstats_nfs_operations_response_time_seconds_total:GETATTR"][:, node] += 1.5 * sevx
+                # collective step time inflates for the whole gang: every
+                # node's transport backlog rises with the degraded peer
+                v["node_netstat_Tcp_transport_backlog_bytes"] += \
+                    (0.01 * bb * (sev - 1.0) * prog)[:, None] * up
+            else:                              # resource_exhaust
+                v["node_memory_MemAvailable_bytes"][:, node] -= 9e11 * sevx
+                v["all_smi_sys_memory_used_bytes"][:, node] += 1.5e11 * sevx
+                v["node_vmstat_pgpgout"][:, node] += 3e5 * sevx
+                v["node_context_switches_total"][:, node] += 5e5 * sevx
+                v["DCGM_FI_DEV_GPU_UTIL"][:, node] -= 15.0 * sevx
+        for o0, o1 in self.outages:
+            mask = ((ts >= o0) & (ts < o1)).astype(float)
+            if mask.any():
+                # scheduler outage: agent heartbeats age out gang-wide
+                # (uniform -> no per-node alarm; the control plane itself
+                # is what goes dark)
+                v["backendai_agent_heartbeat_age_s"] += \
+                    (300.0 * mask)[:, None] * up
 
         # abrupt failure signatures, pinned to their scrape tick
         xid_now = np.zeros(shape)

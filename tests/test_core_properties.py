@@ -218,3 +218,112 @@ def test_bandwidth_paradox_is_slot_bound():
     w2 = dbl.checkpoint_save(4 << 30)
     assert w2.duration_s < 0.6 * w1.duration_s
     assert w1.bandwidth_bytes_s < 0.2 * LINK_BW_BYTES   # the paradox
+
+
+# ---------------------------------------------------------------------------
+# Infrastructure fault band: degrade-don't-kill window geometry
+# ---------------------------------------------------------------------------
+
+_INFRA_WEIGHTS = {"net_degrade": 8.0, "resource_exhaust": 8.0,
+                  "ctrl_blind": 8.0}
+
+
+@given(seed=st.integers(0, 10_000), duration=st.floats(24.0, 24.0 * 14),
+       mtbf=st.floats(10.0, 80.0))
+@settings(max_examples=25, deadline=None)
+def test_infra_windows_bounded_and_non_overlapping(seed, duration, mtbf):
+    """_clip_windows guarantees: every window inside the campaign horizon,
+    per-node non-overlap for degradation windows, global non-overlap for
+    control-plane blind windows, and kind-consistent event fields."""
+    from repro.core.failures import (DEGRADE_KINDS, INFRA_KINDS,
+                                     FailureInjector, blind_windows,
+                                     degradation_windows)
+
+    inj = FailureInjector(mtbf_h=mtbf, seed=seed,
+                          kind_weights=_INFRA_WEIGHTS)
+    events = inj.sample(duration)
+
+    for ev in events:
+        if ev.kind in INFRA_KINDS:
+            assert ev.window_h >= 0.0
+            assert ev.time_h + ev.window_h <= duration + 1e-9
+        if ev.kind == "net_degrade":
+            assert ev.onset == "spike" and not ev.escalate
+            assert 1.2 <= ev.slow_factor <= 1.8
+        elif ev.kind == "resource_exhaust":
+            assert ev.onset in ("gradual", "spike")
+            assert 1.3 <= ev.slow_factor <= 2.0
+        elif ev.kind == "ctrl_blind":
+            assert ev.onset == "" and not ev.escalate
+
+    per_node = {}
+    for node, t0, t1, _sev, _kind, _onset in degradation_windows(events):
+        per_node.setdefault(node, []).append((t0, t1))
+    for spans in per_node.values():
+        spans.sort()
+        for (_a0, a1), (b0, _b1) in zip(spans, spans[1:]):
+            assert a1 <= b0 + 1e-9, "degradation windows overlap on a node"
+
+    bw = sorted(blind_windows(events))
+    for (_a0, a1), (b0, _b1) in zip(bw, bw[1:]):
+        assert a1 <= b0 + 1e-9, "blind windows overlap globally"
+
+
+@given(t0=st.floats(0.0, 1000.0), width=st.floats(0.1, 48.0),
+       n=st.integers(2, 60))
+@settings(max_examples=50, deadline=None)
+def test_gradual_onset_monotone_severity(t0, width, n):
+    """Gradual onset ramps monotonically to the plateau within the window;
+    spike jumps straight to full severity; both are zero outside."""
+    import numpy as np
+
+    from repro.core.failures import onset_progress
+
+    t1 = t0 + width
+    ts = np.linspace(t0, t1 - width * 1e-6, n)
+    prog = onset_progress(ts, t0, t1, "gradual")
+    assert np.all(np.diff(prog) >= -1e-12)
+    assert np.all((prog >= 0.0) & (prog <= 1.0))
+    assert onset_progress([t0 + width * 0.75], t0, t1, "gradual")[0] == 1.0
+    assert onset_progress([t0 - width * 0.01], t0, t1, "gradual")[0] == 0.0
+    assert onset_progress([t1], t0, t1, "gradual")[0] == 0.0
+    assert onset_progress([t0], t0, t1, "spike")[0] == 1.0
+    assert onset_progress([t1], t0, t1, "spike")[0] == 0.0
+
+
+@given(seed=st.integers(0, 5000), w_net=st.floats(0.0, 12.0),
+       w_res=st.floats(0.0, 12.0), w_blind=st.floats(0.0, 12.0),
+       duration=st.floats(24.0, 24.0 * 10))
+@settings(max_examples=15, deadline=None)
+def test_infra_sample_batch_draw_order_identity(seed, w_net, w_res, w_blind,
+                                                duration):
+    """sample_batch over S seeds reproduces each per-seed sample() schedule
+    bit-for-bit with the infra band at arbitrary (incl. zero) weights —
+    the appended draw order is identical on both paths."""
+    import dataclasses
+
+    from repro.core.failures import FailureInjector
+
+    weights = {"net_degrade": w_net, "resource_exhaust": w_res,
+               "ctrl_blind": w_blind}
+    inj = FailureInjector(mtbf_h=30.0, kind_weights=weights)
+    seeds = [seed, seed + 1, seed + 7]
+    batch = inj.sample_batch(duration, seeds)
+    for i, s in enumerate(seeds):
+        solo = dataclasses.replace(inj, seed=s).sample(duration)
+        assert batch.events(i) == solo
+
+
+@given(seed=st.integers(0, 5000))
+@settings(max_examples=15, deadline=None)
+def test_zero_weight_infra_band_keeps_legacy_schedules(seed):
+    """Zero-mass infra entries must not perturb Generator.choice: a
+    schedule drawn with the band explicitly zeroed is identical to one
+    drawn with no kind_weights at all (pre-band seed stability)."""
+    from repro.core.failures import INFRA_KINDS, FailureInjector
+
+    d = 24.0 * 10
+    base = FailureInjector(seed=seed).sample(d)
+    zeroed = FailureInjector(
+        seed=seed, kind_weights={k: 0.0 for k in INFRA_KINDS}).sample(d)
+    assert base == zeroed

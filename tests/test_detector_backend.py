@@ -272,6 +272,88 @@ def test_proactive_campaign_backend_invariant():
 
 
 # ---------------------------------------------------------------------------
+# infra fault band: backend invariance per degrade-don't-kill kind
+# ---------------------------------------------------------------------------
+
+_INFRA_SPANS = {
+    # kind -> how the exporter learns about the window (campaign setup hook)
+    "net_degrade": lambda e: e.begin_degradation(
+        3, 0.2, 0.45, 1.6, "net_degrade", "spike"),
+    "resource_exhaust": lambda e: e.begin_degradation(
+        3, 0.1, 0.5, 1.8, "resource_exhaust", "gradual"),
+    "ctrl_blind": lambda e: e.begin_outage(0.2, 0.4),
+}
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("kind", sorted(_INFRA_SPANS))
+def test_infra_overlay_alarm_parity(kind, backend, force_compiled):
+    """Each infra fault kind's telemetry overlay produces the identical
+    alarm set on the compiled backends as on the numpy oracle — and the
+    degrade kinds alarm on the degraded node with the right net/resource
+    classification.  Blind windows are deliberately gang-wide (every peer
+    shifts together), so the peer detector stays silent and the control
+    plane catches them via its blind-window registry instead."""
+    from repro.control.policy import classify_alarm
+    from repro.telemetry.exporters import ExporterSuite, NodeStateBatch
+
+    n, T = 16, 60
+    outs = {}
+    for bk in ("numpy", backend):
+        exp = ExporterSuite(n, seed=5, n_pad=4)
+        _INFRA_SPANS[kind](exp)
+        ts = np.arange(T) * 30 / 3600
+        vals = exp.tick_batch(ts, NodeStateBatch.constant(T, n,
+                                                          training=1.0))
+        det = StreamingDetector(
+            DetectorConfig(z_threshold=6.0, min_signals=4, persistence=2),
+            backend=bk)
+        alarms = []
+        for a in range(0, T, 17):            # chunk boundaries mid-window
+            alarms += det.push(ts[a:a + 17],
+                               {k: v[a:a + 17] for k, v in vals.items()})
+        outs[bk] = alarms
+    assert outs[backend] == outs["numpy"]
+    if kind == "ctrl_blind":
+        assert outs["numpy"] == []
+    else:
+        assert len(outs["numpy"]) > 0
+        assert {a.node for a in outs["numpy"]} == {3}
+        expect = "net" if kind == "net_degrade" else "resource"
+        assert {classify_alarm(a) for a in outs["numpy"]} == {expect}
+
+
+@pytest.mark.parametrize("preset,seed", [("degraded-network", 25),
+                                         ("resource-pressure", 25),
+                                         ("ops-blind-spots", 12)])
+def test_infra_campaign_backend_invariant(preset, seed):
+    """End to end per infra kind: campaigns dominated by each fault kind
+    keep an identical control ledger, degradation ledger and goodput under
+    the compiled backend (alarm parity => identical throttle/drain/blind
+    decisions => identical trajectory)."""
+    from repro.core.cluster import ClusterSim
+    from repro.ops import get_scenario
+    runs = {}
+    for backend in ("numpy", "xla"):
+        sc = get_scenario(preset).replace(duration_days=2.5,
+                                          telemetry_pad_metrics=0,
+                                          detector_backend=backend)
+        runs[backend] = ClusterSim(sc.to_campaign_config(seed)).run()
+    a, b = runs["numpy"], runs["xla"]
+    assert len(a.control.alarms) > 0
+    assert a.control.alarms == b.control.alarms
+    assert a.goodput_h() == b.goodput_h()
+    assert a.lost_hours == b.lost_hours
+    assert a.degraded_hours == b.degraded_hours
+    sa = a.control.summarize(a.failures, 2.5 * 24.0)
+    assert sa == b.control.summarize(b.failures, 2.5 * 24.0)
+    if preset == "ops-blind-spots":
+        assert sa["n_blind_windows"] > 0     # the blind machinery engaged
+    else:
+        assert sum(np.asarray(a.degraded_hours)) > 0.0
+
+
+# ---------------------------------------------------------------------------
 # shared-mutable-default fixes (satellite)
 # ---------------------------------------------------------------------------
 

@@ -43,6 +43,7 @@ def assert_result_parity(ref, got, tag=""):
     assert ref.downtimes == got.downtimes, tag
     assert ref.checkpoint_events == got.checkpoint_events, tag
     assert ref.lost_hours == got.lost_hours, tag
+    assert ref.degraded_hours == got.degraded_hours, tag
     assert ref.duration_h == got.duration_h, tag
     assert ref.checkpoint_save_s == got.checkpoint_save_s, tag
     assert (ref.control is None) == (got.control is None), tag
@@ -54,6 +55,8 @@ def assert_result_parity(ref, got, tag=""):
         assert a.urgent_save_h == b.urgent_save_h, tag
         assert a.lost_work_avoided_h == b.lost_work_avoided_h, tag
         assert a.failures_on_drained_node == b.failures_on_drained_node, tag
+        assert a.throttles == b.throttles, tag
+        assert a.alarms_deferred == b.alarms_deferred, tag
 
 
 def scalar_results(cfg, seeds):
@@ -161,6 +164,55 @@ def test_drain_parity():
         assert_result_parity(ref, batched[i], f"drain-seed{seed}")
         n_drains += ref.control.n_drains
     assert n_drains > 0, "window executed no drains — parity untested"
+
+
+def test_infra_band_parity_8_seeds():
+    """The infra fault band (degradation windows + ledger, escalation
+    crashes, blind-window deferral and replay, net throttles, predictive
+    drains) reproduces field-for-field across 8 seeds — the weights are
+    tilted so every new mechanism actually fires somewhere in the batch."""
+    cfg = CampaignConfig(
+        duration_h=5 * 24.0, mtbf_h=30.0,
+        kind_weights={"resource_exhaust": 12.0, "ctrl_blind": 30.0},
+        telemetry_pad_metrics=0, telemetry_store=False,
+        control=ControlConfig(drain=True))
+    seeds = list(range(8))
+    batched = BatchedCampaignEngine(cfg).run(seeds)
+    findings = BatchedCampaignEngine(cfg).run_findings(seeds)
+    cov = dict(deferred=0, degraded=0, esc_fails=0, drains=0)
+    for i, seed in enumerate(seeds):
+        ref = ClusterSim(dataclasses.replace(cfg, seed=seed)).run()
+        assert_result_parity(ref, batched[i], f"infra-seed{seed}")
+        assert ref.control.summarize(ref.failures, ref.duration_h) == \
+            batched[i].control.summarize(batched[i].failures,
+                                         batched[i].duration_h), seed
+        assert findings[i] == compute_findings(ref), seed
+        cov["deferred"] += ref.control.alarms_deferred
+        cov["degraded"] += len(ref.degraded_hours)
+        cov["esc_fails"] += sum(
+            1 for s in ref.sessions
+            if s.error and "resource_exhaust" in s.error)
+        cov["drains"] += ref.control.n_drains
+    # the parity claim is only as strong as what the batch exercised
+    for k, v in cov.items():
+        assert v > 0, f"no {k} in any seed — infra parity untested"
+
+
+def test_degraded_hours_reduce_goodput():
+    """A degrade-band window overlapping a RUNNING span must show up in
+    the ledger and be charged against goodput exactly once, after every
+    other deduction (the documented fold order)."""
+    kw = {"net_degrade": 8.0, "resource_exhaust": 8.0}
+    infra = CampaignConfig(duration_h=4 * 24.0, seed=2, kind_weights=kw)
+    b = ClusterSim(infra).run()
+    assert b.degraded_hours, "no degradation window landed on the gang"
+    assert all(d > 0 for d in b.degraded_hours)
+    assert b.goodput_h() == pytest.approx(
+        sum(s.elapsed_running_h(b.duration_h) for s in b.sessions
+            if s.n_nodes > 1)
+        - float(np.sum(b.lost_hours))
+        - b.checkpoint_events * b.checkpoint_save_s / 3600.0
+        - float(np.sum(b.degraded_hours)))
 
 
 def test_engine_rejects_tick_engine():

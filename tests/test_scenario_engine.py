@@ -22,6 +22,24 @@ def test_presets_round_trip():
         assert rt == sc, name
 
 
+def test_get_scenario_isolated_and_presets_run_smoke():
+    """Every preset survives canonicalize -> construct -> run without
+    mutating the shared registry: get_scenario hands out an isolated
+    deep copy (serialization round-trip), so callers tweaking nested
+    config (kind_weights, control, storage) cannot corrupt PRESETS."""
+    snapshot = {name: sc.to_dict() for name, sc in PRESETS.items()}
+    for name in list_scenarios():
+        sc = get_scenario(name)
+        assert sc is not PRESETS[name], name
+        smoke = sc.replace(duration_days=1.0, telemetry_pad_metrics=0)
+        res = ClusterSim(smoke.to_campaign_config(seed=0)).run()
+        assert res.goodput_h() >= 0.0, name
+        if sc.kind_weights is not None:
+            assert sc.kind_weights is not PRESETS[name].kind_weights, name
+            sc.kind_weights["nvlink"] = 1e9          # poison the copy
+    assert {n: sc.to_dict() for n, sc in PRESETS.items()} == snapshot
+
+
 def test_preset_registry():
     assert "paper-faithful" in list_scenarios()
     with pytest.raises(KeyError, match="unknown scenario"):
