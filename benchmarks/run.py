@@ -4,8 +4,8 @@
 
 ``--only`` is repeatable; a bench runs when ANY given substring matches its
 name (CI: ``--only cluster_engine --only storage_fabric --only
-control_plane --only mc_batch --only detector_backend --only
-fault_taxonomy``).  Prints
+control_plane --only mc_batch --only mc_wavefront --only
+detector_backend --only fault_taxonomy``).  Prints
 ``name,us_per_call,derived`` CSV; ``--json`` additionally writes the rows
 as a JSON document (the CI artifact, which ``benchmarks.check_regression``
 gates against the committed baseline) stamped with the git SHA, an
@@ -71,19 +71,24 @@ def main() -> None:
             continue
         try:
             for row in bench():
-                # rows are (name, us, derived) or (name, us, derived,
-                # backend) — the 4th element records which detection/
-                # kernel backend produced the timing
+                # rows are (name, us, derived[, backend[, n_seeds]]) —
+                # the 4th element records which detection/kernel backend
+                # produced the timing, the 5th how many Monte Carlo
+                # seeds the timing covers (so per-seed cost stays
+                # computable from the archived JSON trajectory)
                 name, us, derived = row[:3]
                 backend = row[3] if len(row) > 3 else None
+                n_seeds = row[4] if len(row) > 4 else None
                 rows.append({"name": name, "us_per_call": us,
-                             "derived": derived, "backend": backend})
+                             "derived": derived, "backend": backend,
+                             "n_seeds": n_seeds})
                 print(f"{name},{us:.1f},\"{derived}\"", flush=True)
         except Exception as e:
             failures += 1
             traceback.print_exc()
             rows.append({"name": bench.__name__, "us_per_call": None,
-                         "derived": f"ERROR: {e}", "backend": None})
+                         "derived": f"ERROR: {e}", "backend": None,
+                         "n_seeds": None})
             print(f"{bench.__name__},nan,\"ERROR: {e}\"", flush=True)
 
     if args.json:

@@ -17,8 +17,17 @@ columns to the report:
     PYTHONPATH=src python examples/scenario_sweep.py \
         --scenarios paper-faithful,smart-retry --mc-seeds 256 \
         --report sweep_mc.md
+
+Fleet-scale dense sweeps stack EVERY control-free (scenario, seed) lane
+into one compiled XLA device pass — the whole campaign grid advances
+inside a single jitted while-loop, with findings bitwise identical to
+the numpy engines:
+
+    PYTHONPATH=src python examples/scenario_sweep.py \
+        --scenarios all --mc-seeds 10000 --grid --report sweep_grid.md
 """
 import argparse
+import warnings
 
 from repro.ops import SweepRunner, get_scenario, list_scenarios
 
@@ -60,6 +69,19 @@ def main():
                          "the report; overrides --seeds with range(N) and "
                          "skips the per-seed F1 sub-campaign unless "
                          "--telemetry-days is set explicitly")
+    ap.add_argument("--grid", action="store_true",
+                    help="whole-sweep wavefront: stack every control-free "
+                         "(scenario, seed) lane into one compiled XLA "
+                         "device pass (requires --mc-seeds; control-plane "
+                         "scenarios fall back to the numpy engine; "
+                         "findings are bitwise identical either way)")
+    ap.add_argument("--wavefront-backend", default=None,
+                    choices=("auto", "numpy", "xla", "pallas"),
+                    help="Monte Carlo campaign backend: auto picks the "
+                         "compiled device core when the lane count clears "
+                         "its floor, numpy forces the stacked-numpy "
+                         "wavefront, xla/pallas force the compiled core "
+                         "(--grid implies xla unless set)")
     ap.add_argument("--detector-backend", default=None,
                     choices=("numpy", "xla", "pallas"),
                     help="streaming-detector pass-1 backend for control-"
@@ -88,6 +110,25 @@ def main():
         args.telemetry_days = 0.0
     if args.telemetry_days is None:
         args.telemetry_days = 0.0 if args.mc_seeds else 2.0
+    if args.grid and not args.mc_seeds:
+        ap.error("--grid needs --mc-seeds (it stacks the Monte Carlo "
+                 "seed axis into the device pass)")
+    wavefront = args.wavefront_backend or ("xla" if args.grid else "auto")
+    if args.mc_seeds and wavefront != "numpy":
+        # compiled lanes pad to the next power of two (>= 64): a
+        # non-bucketed seed count pays for lanes it never reads
+        try:
+            from repro.kernels.common import next_pow2
+            bucket = max(next_pow2(args.mc_seeds), 64)
+            if bucket != args.mc_seeds:
+                warnings.warn(
+                    f"--mc-seeds {args.mc_seeds} is not a power-of-two "
+                    "lane bucket: the compiled pass pads its lane axis "
+                    f"to the next bucket, so up to {bucket} seeds cost "
+                    "the same device wall clock (and every distinct "
+                    "count compiles its own program)", stacklevel=1)
+        except ImportError:
+            pass
 
     names = list_scenarios() if args.scenarios == "all" \
         else [s.strip() for s in args.scenarios.split(",") if s.strip()]
@@ -114,8 +155,8 @@ def main():
                  if sc.telemetry_days else ""))
 
     res = SweepRunner(scenarios, seeds=seeds, max_workers=args.workers,
-                      executor=args.executor,
-                      mc_seeds=args.mc_seeds).run()
+                      executor=args.executor, mc_seeds=args.mc_seeds,
+                      wavefront_backend=wavefront).run()
 
     n = len(res.outcomes)
     print(f"\n{n} campaigns in {res.wall_s:.1f} s wall "

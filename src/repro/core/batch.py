@@ -41,7 +41,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.cluster import (TICK_H, _MAX_SPAN_TICKS, CampaignConfig,
+from repro.core.cluster import (RNG_STREAM_MANUAL, RNG_STREAM_STRUCT,
+                                TICK_H, _MAX_SPAN_TICKS, CampaignConfig,
                                 CampaignResult, ClusterSim)
 from repro.core.exclusion import ExclusionInterval, ExclusionTracker
 from repro.core.failures import (DEGRADE_KINDS, KIND_NAMES, FailureBatch,
@@ -204,8 +205,14 @@ class _Batch:
         self.repair = np.full((S, n), inf)
         self.rep_min = np.full(S, inf)    # row min, kept in sync by writers
 
-        # per-seed python structures
+        # per-seed python structures; the main stream consumes only
+        # ``random()`` uniforms — exponentials live on dedicated
+        # [seed, salt] streams exactly as in _CampaignState
         self.rngs = [np.random.default_rng(s) for s in seeds]
+        self.rngs_manual = [
+            np.random.default_rng([s, RNG_STREAM_MANUAL]) for s in seeds]
+        self.rngs_struct = [
+            np.random.default_rng([s, RNG_STREAM_STRUCT]) for s in seeds]
         self.isolated: List[Dict[int, str]] = [{} for _ in range(S)]
         self.cur_nodes_idx: List[Optional[List[int]]] = [None] * S
         self.npart_idx: List[Optional[List[int]]] = [None] * S
@@ -299,11 +306,17 @@ class BatchedCampaignEngine:
     Only the (default) event engine semantics are supported.
     """
 
-    def __init__(self, config: CampaignConfig):
+    def __init__(self, config: CampaignConfig,
+                 wavefront_backend: str = "auto"):
         if config.engine != "event":
             raise ValueError(
                 "BatchedCampaignEngine batches the event engine; "
                 f"got engine={config.engine!r}")
+        if wavefront_backend not in ("auto", "numpy", "xla", "pallas"):
+            raise ValueError(
+                f"unknown wavefront backend {wavefront_backend!r}; "
+                "expected 'auto', 'numpy', 'xla' or 'pallas'")
+        self.wavefront_backend = wavefront_backend
         base = ClusterSim(config)         # resolves the storage fabric
         self.cfg = base.cfg
         self.fabric = base.fabric
@@ -321,6 +334,22 @@ class BatchedCampaignEngine:
         return [self._materialize(B, i) for i in range(B.S)]
 
     def run_findings(self, seeds: Sequence[int]) -> List[dict]:
+        # findings-only campaigns are the compiled wavefront's parity
+        # surface: route eligible batches through the device core (the
+        # object-materializing `run` path stays numpy by construction)
+        if self.wavefront_backend != "numpy":
+            try:
+                from repro.kernels.wavefront import (
+                    resolve_wavefront_backend, run_findings_compiled)
+            except ImportError:          # no jax: auto degrades to numpy
+                if self.wavefront_backend != "auto":
+                    raise
+            else:
+                backend = resolve_wavefront_backend(
+                    self.wavefront_backend, self.cfg, len(seeds))
+                if backend != "numpy":
+                    return run_findings_compiled(self.cfg, seeds,
+                                                 backend=backend)
         B = self._simulate(seeds, materialize=False)
         return [self._findings(B, i) for i in range(B.S)]
 
@@ -613,23 +642,25 @@ class BatchedCampaignEngine:
                 B.chains[s].append(
                     Chain(task_name=f"b200_v{B.version[s]}"))
             self._close_chain(B, s)
-            B.pend[s] = t + self._manual_delay(rng, t)
+            B.pend[s] = t + self._manual_delay(B.rngs_manual[s], t)
             B.down_auto[s] = False
             if rng.random() < cfg.p_manual_misfix:
                 B.struct_until[s] = max(
                     B.struct_until[s],
-                    B.pend[s] + rng.exponential(
-                        cfg.structural_fix_mean_h / 2))
+                    B.pend[s] + (cfg.structural_fix_mean_h / 2)
+                    * B.rngs_struct[s].standard_exponential())
             else:
                 B.struct_until[s] = min(B.struct_until[s], B.pend[s])
 
-    def _manual_delay(self, rng, t_h: float) -> float:
+    def _manual_delay(self, rng_manual, t_h: float) -> float:
         cfg = self.cfg
         hour_of_day = (t_h % 24.0)
         day = int(t_h // 24.0) % 7
         if day >= 5 or hour_of_day < 8 or hour_of_day > 20:
-            return float(rng.exponential(cfg.manual_response_h_night))
-        return float(rng.exponential(cfg.manual_response_h_day))
+            return float(cfg.manual_response_h_night
+                         * rng_manual.standard_exponential())
+        return float(cfg.manual_response_h_day
+                     * rng_manual.standard_exponential())
 
     def _process_prepare_done(self, B: _Batch, s: int, t: float):
         if B.prep_fails[s]:
@@ -695,7 +726,8 @@ class BatchedCampaignEngine:
             if rng.random() < cfg.p_software_failure:
                 B.struct_until[s] = max(
                     B.struct_until[s],
-                    t + rng.exponential(cfg.structural_fix_mean_h))
+                    t + cfg.structural_fix_mean_h
+                    * B.rngs_struct[s].standard_exponential())
             xid = B.fxid[j]
             xid = xid if xid >= 0 else None
             self._fail_session(B, s, t, KIND_NAMES[kcode], xid)
@@ -723,7 +755,8 @@ class BatchedCampaignEngine:
             if rng.random() < cfg.p_software_failure:
                 B.struct_until[s] = max(
                     B.struct_until[s],
-                    t + rng.exponential(cfg.structural_fix_mean_h))
+                    t + cfg.structural_fix_mean_h
+                    * B.rngs_struct[s].standard_exponential())
             self._fail_session(B, s, t, "resource_exhaust", None)
             self._schedule_next(B, s, t)
 

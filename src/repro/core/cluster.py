@@ -58,6 +58,17 @@ TICK_H = SCRAPE_INTERVAL_S / 3600.0
 # buffers stay modest even when the campaign runs uninterrupted for days
 _MAX_SPAN_TICKS = 2048
 
+# Dedicated rng streams (seeded ``default_rng([seed, salt])``) for the two
+# exponential-draw families.  Keeping them off the main ``default_rng(seed)``
+# stream leaves that stream consuming *only* ``random()`` uniforms, which
+# makes it materializable up front as a flat draw tape (``rng.random(N)``
+# equals N sequential ``rng.random()`` calls positionally) — the compiled
+# wavefront core (kernels/wavefront) depends on this.  Ziggurat
+# exponentials consume a variable number of raw draws per sample, so they
+# can only be tape-ified from streams of their own.
+RNG_STREAM_MANUAL = 7001      # operator manual-response delays
+RNG_STREAM_STRUCT = 7013      # structural-fix (root-cause) durations
+
 
 @dataclass
 class CampaignConfig:
@@ -171,6 +182,12 @@ class _CampaignState:
     def __init__(self, cfg: CampaignConfig, rng: np.random.Generator):
         self.cfg = cfg
         self.rng = rng
+        # exponential draws live on dedicated streams (see RNG_STREAM_*):
+        # the main stream stays pure-uniform and therefore tape-friendly
+        self.rng_manual = np.random.default_rng(
+            [cfg.seed, RNG_STREAM_MANUAL])
+        self.rng_struct = np.random.default_rng(
+            [cfg.seed, RNG_STREAM_STRUCT])
         self.sched = GangScheduler(cfg.n_nodes,
                                    spares=cfg.n_nodes - cfg.job_nodes)
         self.retry_engine = RetryEngine(cfg.retry)
@@ -312,8 +329,8 @@ class _CampaignState:
             if rng.random() < cfg.p_manual_misfix:
                 self.structural_until = max(
                     self.structural_until,
-                    self.pending_start + rng.exponential(
-                        cfg.structural_fix_mean_h / 2))
+                    self.pending_start + (cfg.structural_fix_mean_h / 2)
+                    * self.rng_struct.standard_exponential())
             else:
                 self.structural_until = min(self.structural_until,
                                             self.pending_start)
@@ -325,8 +342,10 @@ class _CampaignState:
         hour_of_day = (t_h % 24.0)
         day = int(t_h // 24.0) % 7
         if day >= 5 or hour_of_day < 8 or hour_of_day > 20:
-            return float(self.rng.exponential(cfg.manual_response_h_night))
-        return float(self.rng.exponential(cfg.manual_response_h_day))
+            return float(cfg.manual_response_h_night
+                         * self.rng_manual.standard_exponential())
+        return float(cfg.manual_response_h_day
+                     * self.rng_manual.standard_exponential())
 
     # -- shared per-time-step handlers --------------------------------------
 
@@ -421,7 +440,8 @@ class _CampaignState:
             if rng.random() < cfg.p_software_failure:
                 self.structural_until = max(
                     self.structural_until,
-                    t + rng.exponential(cfg.structural_fix_mean_h))
+                    t + cfg.structural_fix_mean_h
+                    * self.rng_struct.standard_exponential())
             self.fail_session(t, ev.kind, xid=ev.xid)
             self.schedule_next(t, xid=ev.xid)
 
@@ -447,7 +467,8 @@ class _CampaignState:
             if rng.random() < cfg.p_software_failure:
                 self.structural_until = max(
                     self.structural_until,
-                    t + rng.exponential(cfg.structural_fix_mean_h))
+                    t + cfg.structural_fix_mean_h
+                    * self.rng_struct.standard_exponential())
             self.fail_session(t, "resource_exhaust")
             self.schedule_next(t)
 

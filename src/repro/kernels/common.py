@@ -1,0 +1,80 @@
+"""Shared shape-bucketing / jit-cache discipline for the compiled packages.
+
+Both compiled hot paths — the robust-stats detection pass
+(``kernels/robust_stats``) and the whole-campaign wavefront
+(``kernels/wavefront``) — face the same deployment problem: callers hand
+them shapes that vary run to run (seed groups shrink as seeds halt, span
+chunks have ragged tails, Monte Carlo sweeps pick arbitrary seed counts),
+while jit compiles per exact shape.  The discipline that keeps the jit
+cache small lives here so the two packages cannot drift:
+
+* **pow2 seed bucketing** — the leading seed/lane axis pads to the next
+  power of two (`next_pow2`); padded lanes arrive inactive and are
+  sliced away.
+* **eighth-octave row buckets** (`row_bucket`) for expensively-compiled
+  2-D stages: <= 12.5% pad waste, at most 8 jit entries per octave.
+* **tick-axis tiling** (`tick_layout`) at ``TILE_T`` with a 64-multiple
+  tail, so long spans share a canonical slab width.
+* **numpy dispatch floors** — problems smaller than
+  ``COMPILED_MIN_ELEMS`` stacked elements (or, for the wavefront, fewer
+  than ``WAVEFRONT_MIN_SEEDS`` lanes) are cheaper on the numpy oracle
+  than on a device round trip and dispatch back to it.  Bit-exact either
+  way; this is pure dispatch, like any size-gated BLAS offload.
+"""
+from __future__ import annotations
+
+import jax
+
+#: backends the compiled packages accept ("numpy" is always the parity
+#: oracle path; "xla" the jitted reference; "pallas" the TPU kernel)
+BACKENDS = ("numpy", "xla", "pallas")
+
+# metric-axis chunk budget (elements of one stacked device chunk)
+BLOCK_ELEMS = 1 << 26
+
+# spans smaller than this (stacked elements) route back to numpy
+COMPILED_MIN_ELEMS = 1 << 21
+
+# seed floor for the compiled wavefront: below this lane count the
+# while-loop dispatch overhead dominates and the numpy wavefront wins
+WAVEFRONT_MIN_SEEDS = 64
+
+# tick-axis tile: long spans are cut into TILE_T slabs so the jit cache
+# sees one canonical width instead of every emitted span length
+TILE_T = 256
+
+
+def validate_backend(backend: str, *, what: str = "backend") -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown {what} {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    return backend
+
+
+def next_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+def row_bucket(r: int, *, floor: int = 4096) -> int:
+    """Eighth-octave row bucket: <= 12.5% pad waste on the shapes where
+    the compiled stage's time matters, a handful of cache entries per
+    octave (the floor keeps tiny problems from paying a big-bucket
+    stage)."""
+    grain = max(floor, next_pow2(r) // 8)
+    return -(-r // grain) * grain
+
+
+def tick_layout(T: int):
+    """Tile widths covering T: full TILE_T slabs + a 64-multiple tail."""
+    tiles = [TILE_T] * (T // TILE_T)
+    tail = T % TILE_T
+    if tail:
+        tiles.append(-(-tail // 64) * 64)
+    return tiles or [64]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"

@@ -42,6 +42,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.common import (BACKENDS, BLOCK_ELEMS,  # noqa: F401
+                                  COMPILED_MIN_ELEMS, TILE_T)
+from repro.kernels.common import next_pow2 as _next_pow2
+from repro.kernels.common import on_tpu as _on_tpu
+from repro.kernels.common import row_bucket as _row_bucket
+from repro.kernels.common import tick_layout as _tick_layout
+from repro.kernels.common import validate_backend as _validate_backend
 from repro.kernels.robust_stats.kernel import (N_LANES, T_TILE,
                                                robust_hit_blocks)
 from repro.kernels.robust_stats.ref import (bitonic_sort_rows,
@@ -50,57 +57,9 @@ from repro.kernels.robust_stats.ref import (bitonic_sort_rows,
                                             hit_from_sorted_ref,
                                             streak_scan_ref)
 
-#: backends the streaming detector accepts ("numpy" is the oracle path
-#: implemented in repro.control.streaming; the other two land here)
-BACKENDS = ("numpy", "xla", "pallas")
-
-# metric-axis chunk budget (elements of one stacked (S, B, T, n) chunk)
-BLOCK_ELEMS = 1 << 26
-
-# spans smaller than this (stacked elements) are cheaper on the numpy
-# oracle than on a device round trip (padding, transfer, ~10 dispatches)
-# — the streaming detector routes them back to numpy.  Bit-exact either
-# way; this is pure dispatch, like any size-gated BLAS offload.
-COMPILED_MIN_ELEMS = 1 << 21
-
-# tick-axis tile: long spans are cut into TILE_T slabs so the jit cache
-# sees one canonical width instead of every emitted span length
-TILE_T = 256
-
 
 def validate_backend(backend: str) -> str:
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown detector backend {backend!r}; "
-                         f"expected one of {BACKENDS}")
-    return backend
-
-
-def _next_pow2(v: int) -> int:
-    p = 1
-    while p < v:
-        p *= 2
-    return p
-
-
-def _row_bucket(r: int) -> int:
-    """Eighth-octave row bucket: <= 12.5% pad waste on the shapes where
-    the sort time matters, a handful of sort cache entries per octave
-    (the 4096 floor keeps tiny pushes from paying a big-bucket sort)."""
-    grain = max(4096, _next_pow2(r) // 8)
-    return -(-r // grain) * grain
-
-
-def _tick_layout(T: int):
-    """Tile widths covering T: full TILE_T slabs + a 64-multiple tail."""
-    tiles = [TILE_T] * (T // TILE_T)
-    tail = T % TILE_T
-    if tail:
-        tiles.append(-(-tail // 64) * 64)
-    return tiles or [64]
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return _validate_backend(backend, what="detector backend")
 
 
 # -- jit stages --------------------------------------------------------------

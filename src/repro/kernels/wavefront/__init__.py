@@ -1,0 +1,12 @@
+"""Compiled whole-campaign wavefront (jitted XLA / Pallas).
+
+``run_findings_compiled`` advances every Monte Carlo lane (seed x scenario
+config) of a campaign batch to its own next event inside one jitted
+``lax.while_loop`` and returns findings dicts bitwise identical to the
+numpy ``BatchedCampaignEngine`` / scalar ``ClusterSim`` path.  See
+``ops.py`` for the dispatch rules and ``tapes.py`` for the draw-tape
+discipline that makes the rng streams materializable up front.
+"""
+from repro.kernels.wavefront.ops import (compiled_eligible,  # noqa: F401
+                                         resolve_wavefront_backend,
+                                         run_findings_compiled)

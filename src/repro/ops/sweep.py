@@ -546,13 +546,24 @@ class SweepRunner:
     stay per-seed — a retained 30 s x ~300-metric store per seed is
     memory-bound, not compute-bound — so Monte Carlo sweeps are designed
     for the F2-F4 + goodput findings first.
+
+    ``wavefront_backend``: how Monte Carlo campaigns simulate.  "auto"
+    (default) stacks every control-free scenario with the same node count
+    into ONE compiled device pass (`run_findings_grid`) when the lane
+    count clears the compiled floor, and falls back to the numpy engine
+    otherwise; "numpy" forces the stacked-numpy wavefront everywhere;
+    "xla"/"pallas" force the compiled core for every eligible scenario
+    (control-plane scenarios still run numpy — the sweep mixes presets,
+    so an eligibility error would make the flag unusable).  Findings are
+    bitwise identical across all of these.
     """
 
     def __init__(self, scenarios: Sequence[Union[Scenario, str]],
                  seeds: Iterable[int] = (0, 1, 2),
                  max_workers: Optional[int] = None,
                  executor: str = "process",
-                 mc_seeds: Optional[int] = None):
+                 mc_seeds: Optional[int] = None,
+                 wavefront_backend: str = "auto"):
         self.scenarios = [get_scenario(s) if isinstance(s, str) else s
                           for s in scenarios]
         names = [s.name for s in self.scenarios]
@@ -565,6 +576,10 @@ class SweepRunner:
         if executor not in ("process", "thread", "serial"):
             raise ValueError(f"unknown executor {executor!r}")
         self.executor = executor
+        if wavefront_backend not in ("auto", "numpy", "xla", "pallas"):
+            raise ValueError(
+                f"unknown wavefront backend {wavefront_backend!r}")
+        self.wavefront_backend = wavefront_backend
 
     def run(self) -> SweepResult:
         if self.mc_seeds is not None:
@@ -592,15 +607,61 @@ class SweepRunner:
         return SweepResult(scenarios=self.scenarios, seeds=self.seeds,
                            outcomes=outcomes, wall_s=wall)
 
+    def _grid_pass(self) -> Dict[int, List[dict]]:
+        """Whole-sweep wavefront: stack every eligible (scenario, seed)
+        lane of the Monte Carlo sweep into single compiled device passes
+        (one per node count — gang masks share the node axis) and return
+        ``scenario_index -> per-seed findings`` for the covered subset."""
+        backend = self.wavefront_backend
+        if backend == "numpy":
+            return {}
+        try:
+            from repro.kernels.common import WAVEFRONT_MIN_SEEDS
+            from repro.kernels.wavefront import compiled_eligible
+            from repro.kernels.wavefront.ops import run_findings_grid
+        except ImportError:              # no jax: auto degrades to numpy
+            if backend != "auto":
+                raise
+            return {}
+        cfgs = [sc.to_campaign_config(0) for sc in self.scenarios]
+        groups: Dict[int, List[int]] = {}
+        for i, cfg in enumerate(cfgs):
+            if compiled_eligible(cfg):
+                groups.setdefault(cfg.n_nodes, []).append(i)
+        dev = "xla" if backend == "auto" else backend
+        out: Dict[int, List[dict]] = {}
+        t_g = time.perf_counter()
+        for idxs in groups.values():
+            if backend == "auto" \
+                    and len(idxs) * len(self.seeds) < WAVEFRONT_MIN_SEEDS:
+                continue                 # too few lanes to beat numpy
+            per_cfg = run_findings_grid([cfgs[i] for i in idxs],
+                                        self.seeds, backend=dev)
+            for j, i in enumerate(idxs):
+                out[i] = per_cfg[j]
+        self._grid_per_campaign = (time.perf_counter() - t_g) \
+            / max(len(out) * len(self.seeds), 1)
+        return out
+
     def _run_mc(self) -> SweepResult:
-        """Monte Carlo path: one batched-engine pass per scenario."""
+        """Monte Carlo path: one stacked pass per scenario — through the
+        whole-sweep compiled grid where eligible, the batched numpy
+        engine otherwise (identical findings either way)."""
         from repro.core.batch import BatchedCampaignEngine
         t0 = time.perf_counter()
+        grid = self._grid_pass()
+        eng_backend = "numpy" if self.wavefront_backend == "numpy" \
+            else "auto"
         outcomes: List[SweepOutcome] = []
-        for sc in self.scenarios:
+        for si, sc in enumerate(self.scenarios):
             t_sc = time.perf_counter()
-            engine = BatchedCampaignEngine(sc.to_campaign_config(0))
-            findings_list = engine.run_findings(self.seeds)
+            if si in grid:
+                findings_list = grid[si]
+            else:
+                engine = BatchedCampaignEngine(
+                    sc.to_campaign_config(0),
+                    wavefront_backend=eng_backend)
+                findings_list = engine.run_findings(self.seeds)
             f2 = _f2_findings(sc) if sc.storage_fabric else None
             for seed, findings in zip(self.seeds, findings_list):
                 if f2:
@@ -609,9 +670,12 @@ class SweepRunner:
                     findings.update(_f1_findings(sc, seed))
                 outcomes.append(SweepOutcome(sc.name, seed, findings))
             # shared average, stamped after the (possibly F1-dominated)
-            # per-seed work so it matches what the pool path reports
+            # per-seed work so it matches what the pool path reports;
+            # grid-covered scenarios add their share of the device pass
             per_campaign = (time.perf_counter() - t_sc) \
                 / max(len(self.seeds), 1)
+            if si in grid:
+                per_campaign += self._grid_per_campaign
             for findings in findings_list:
                 findings["wall_s"] = per_campaign
         wall = time.perf_counter() - t0

@@ -314,6 +314,86 @@ def test_infra_sample_batch_draw_order_identity(seed, w_net, w_res, w_blind,
         assert batch.events(i) == solo
 
 
+def _lane_tables_for(seed, duration=48.0):
+    import pytest
+
+    pytest.importorskip("jax")   # the wavefront package re-exports the
+    from repro.core.cluster import CampaignConfig, ClusterSim  # jitted core
+    from repro.core.failures import FailureInjector
+    from repro.kernels.wavefront.tapes import build_lane_tables
+
+    cfg = ClusterSim(CampaignConfig(duration_h=duration, seed=seed)).cfg
+    inj = FailureInjector(n_nodes=cfg.n_nodes, mtbf_h=cfg.mtbf_h,
+                          hot_fraction=cfg.hot_fraction,
+                          hot_weight=cfg.hot_weight, seed=cfg.seed)
+    fails = inj.sample_batch(cfg.duration_h, [seed])
+    return cfg, build_lane_tables(cfg, fails, [seed])
+
+
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 64))
+@settings(max_examples=15, deadline=None)
+def test_wavefront_uniform_tape_draw_order_identity(seed, k):
+    """The compiled core's main uniform tape is positionally identical to
+    k sequential ``rng.random()`` calls on the scalar engine's main
+    stream — the single ``u_ptr`` walking the tape sees bit-for-bit the
+    draws the scalar chain would consume, in the same order."""
+    import numpy as np
+
+    cfg, tables = _lane_tables_for(seed)
+    r = np.random.default_rng(seed)
+    seq = [r.random() for _ in range(k)]
+    assert tables.device["u"][0, :k].tolist() == seq
+
+
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 32))
+@settings(max_examples=15, deadline=None)
+def test_wavefront_exponential_tapes_draw_order_identity(seed, k):
+    """Manual-repair and structural-fix tapes reproduce sequential
+    per-call draws on their dedicated rng streams, pre-multiplied by the
+    same means the scalar engine applies — both day/night (and
+    half/full) variants transform the SAME underlying draw, so whichever
+    branch the replayed chain takes reads the scalar engine's float."""
+    import numpy as np
+
+    from repro.core.cluster import RNG_STREAM_MANUAL, RNG_STREAM_STRUCT
+
+    cfg, tables = _lane_tables_for(seed)
+    rm = np.random.default_rng([seed, RNG_STREAM_MANUAL])
+    std_m = [rm.standard_exponential() for _ in range(k)]
+    assert tables.device["man_day"][0, :k].tolist() == \
+        [cfg.manual_response_h_day * s for s in std_m]
+    assert tables.device["man_night"][0, :k].tolist() == \
+        [cfg.manual_response_h_night * s for s in std_m]
+    rx = np.random.default_rng([seed, RNG_STREAM_STRUCT])
+    std_x = [rx.standard_exponential() for _ in range(k)]
+    assert tables.device["x_full"][0, :k].tolist() == \
+        [cfg.structural_fix_mean_h * s for s in std_x]
+    assert tables.device["x_half"][0, :k].tolist() == \
+        [cfg.structural_fix_mean_h / 2 * s for s in std_x]
+
+
+@given(seed=st.integers(0, 10_000), j=st.integers(0, 63))
+@settings(max_examples=15, deadline=None)
+def test_wavefront_duration_tapes_match_scalar_uniform_calls(seed, j):
+    """The pre-transformed load-duration tapes agree bitwise with the
+    scalar engine's ``rng.uniform`` calls at every tape position: a
+    scalar chain that consumed j draws and then rolled a load duration
+    gets exactly ``dur_*[j]`` (``Generator.uniform`` is ``low +
+    (high - low) * random()``, the same three floats in the same
+    order)."""
+    import numpy as np
+
+    cfg, tables = _lane_tables_for(seed)
+    r = np.random.default_rng(seed)
+    r.random(j)                       # advance to tape position j
+    v = r.uniform(-0.08, 0.3)
+    assert tables.device["dur_warm"][0, j] == cfg.loading_time_h + v
+    assert tables.device["dur_cold"][0, j] == cfg.loading_cold_h + v
+    r2 = np.random.default_rng(seed)
+    r2.random(j)
+    assert tables.device["dur_fail"][0, j] == r2.uniform(0.05, 0.15)
+
+
 @given(seed=st.integers(0, 5000))
 @settings(max_examples=15, deadline=None)
 def test_zero_weight_infra_band_keeps_legacy_schedules(seed):

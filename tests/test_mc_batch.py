@@ -296,6 +296,131 @@ def test_sweep_runner_mc_distribution_report():
     assert "Distributional findings" not in few.to_markdown()
 
 
+# ---------------------------------------------------------------------------
+# compiled wavefront (XLA/Pallas device core): bitwise findings parity
+# ---------------------------------------------------------------------------
+
+def _wavefront_ops():
+    pytest.importorskip("jax")
+    from repro.kernels.wavefront import ops
+    return ops
+
+
+def test_compiled_wavefront_reactive_parity_8_seeds():
+    """The jitted while-loop core reproduces the scalar findings dict
+    bitwise (every float, every median, every None) on both compiled
+    backends — the benchmark configuration, 8 seeds."""
+    _wavefront_ops()
+    cfg = CampaignConfig(duration_h=15 * 24.0)
+    seeds = list(range(8))
+    ref = [compute_findings(r) for r in scalar_results(cfg, seeds)]
+    for backend in ("xla", "pallas"):
+        eng = BatchedCampaignEngine(cfg, wavefront_backend=backend)
+        got = eng.run_findings(seeds)
+        for i, seed in enumerate(seeds):
+            assert got[i] == ref[i], (backend, seed)
+
+
+def test_compiled_wavefront_retry_presets_parity():
+    """Non-FIXED retry paths (exp backoff, structural stop, no-retry)
+    stay exact through the device core."""
+    _wavefront_ops()
+    seeds = [1, 5, 9, 13]
+    for preset in ("exp-backoff", "smart-retry", "no-auto-retry"):
+        sc = get_scenario(preset).replace(duration_days=12.0)
+        cfg = sc.to_campaign_config(0)
+        got = BatchedCampaignEngine(
+            cfg, wavefront_backend="xla").run_findings(seeds)
+        for i, seed in enumerate(seeds):
+            ref = ClusterSim(sc.to_campaign_config(seed)).run()
+            assert got[i] == compute_findings(ref), (preset, seed)
+
+
+def test_compiled_wavefront_infra_band_parity():
+    """Control-free infra fault band: degradation windows, escalation
+    crashes and fail-slow isolation all fold identically on device."""
+    _wavefront_ops()
+    cfg = CampaignConfig(
+        duration_h=5 * 24.0, mtbf_h=30.0,
+        kind_weights={"resource_exhaust": 10.0, "net_degrade": 8.0})
+    seeds = list(range(8))
+    got = BatchedCampaignEngine(
+        cfg, wavefront_backend="xla").run_findings(seeds)
+    refs = scalar_results(cfg, seeds)
+    for i, seed in enumerate(seeds):
+        assert got[i] == compute_findings(refs[i]), seed
+    # the claim is only as strong as what the band exercised
+    assert any(r.degraded_hours for r in refs), "no degradation landed"
+    assert any("resource_exhaust" in (s.error or "")
+               for r in refs for s in r.sessions), "no escalation crash"
+
+
+def test_compiled_backend_rejects_ineligible_config():
+    """Explicitly forcing the device core on a control-plane config is a
+    hard error; auto silently stays on the numpy wavefront."""
+    ops = _wavefront_ops()
+    sc = get_scenario("proactive").replace(duration_days=2.0,
+                                           telemetry_pad_metrics=0)
+    cfg = sc.to_campaign_config(0)
+    assert not ops.compiled_eligible(cfg)
+    with pytest.raises(ValueError, match="control-free campaign"):
+        BatchedCampaignEngine(
+            cfg, wavefront_backend="xla").run_findings([0, 1])
+    assert ops.resolve_wavefront_backend("auto", cfg, 512) == "numpy"
+    with pytest.raises(ValueError, match="unknown wavefront backend"):
+        BatchedCampaignEngine(cfg, wavefront_backend="cuda")
+
+
+def test_compiled_auto_floor():
+    """auto routes small batches to numpy (compile cost dominates) and
+    large eligible batches to the device core; explicit backends ignore
+    the floor."""
+    ops = _wavefront_ops()
+    from repro.kernels.common import WAVEFRONT_MIN_SEEDS
+    cfg = CampaignConfig(duration_h=24.0)
+    assert ops.compiled_eligible(cfg)
+    assert ops.resolve_wavefront_backend(
+        "auto", cfg, WAVEFRONT_MIN_SEEDS - 1) == "numpy"
+    assert ops.resolve_wavefront_backend(
+        "auto", cfg, WAVEFRONT_MIN_SEEDS) == "xla"
+    assert ops.resolve_wavefront_backend("xla", cfg, 2) == "xla"
+    assert ops.resolve_wavefront_backend("numpy", cfg, 4096) == "numpy"
+
+
+def test_run_findings_grid_matches_single_config_runs():
+    """The dense grid pass (every config x seed as one lane axis) returns
+    exactly what per-config compiled runs return."""
+    ops = _wavefront_ops()
+    cfgs = [CampaignConfig(duration_h=6 * 24.0),
+            CampaignConfig(duration_h=6 * 24.0, mtbf_h=30.0,
+                           kind_weights={"net_degrade": 6.0})]
+    seeds = [0, 1, 2, 3]
+    grid = ops.run_findings_grid(cfgs, seeds, backend="xla")
+    for g, cfg in enumerate(cfgs):
+        solo = ops.run_findings_compiled(cfg, seeds, backend="xla")
+        for i, seed in enumerate(seeds):
+            assert grid[g][i] == solo[i], (g, seed)
+            assert grid[g][i] == compute_findings(
+                ClusterSim(dataclasses.replace(cfg, seed=seed)).run()), \
+                (g, seed)
+
+
+def test_sweep_runner_grid_pass_matches_numpy():
+    """SweepRunner's whole-sweep grid pass feeds the same findings into
+    the outcome rows as the pure-numpy path (control scenarios fall back
+    transparently)."""
+    _wavefront_ops()
+    scs = [get_scenario("paper-faithful").replace(duration_days=6.0),
+           get_scenario("smart-retry").replace(duration_days=6.0)]
+    dev = SweepRunner(scs, mc_seeds=8, wavefront_backend="xla").run()
+    ref = SweepRunner(scs, mc_seeds=8, wavefront_backend="numpy").run()
+    assert len(dev.outcomes) == len(ref.outcomes) == 16
+    for a, b in zip(dev.outcomes, ref.outcomes):
+        fa = {k: v for k, v in a.findings.items() if k != "wall_s"}
+        fb = {k: v for k, v in b.findings.items() if k != "wall_s"}
+        assert a.seed == b.seed and fa == fb, (a.scenario, a.seed)
+
+
 def test_sweep_runner_mc_storage_fabric_f2_columns():
     sc = get_scenario("storage-fabric").replace(duration_days=5.0)
     res = SweepRunner([sc], mc_seeds=8).run()
