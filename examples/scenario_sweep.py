@@ -58,9 +58,11 @@ def main():
     ap.add_argument("--preset", default=None,
                     help="proactive-vs-reactive quickstart: sweep the "
                          "reactive baseline against PRESET (e.g. "
-                         "'proactive' or 'proactive-aggressive') on "
-                         "identical seeds; defaults --days to 14 and skips "
-                         "the F1 sub-campaign")
+                         "'proactive', 'proactive-aggressive' or "
+                         "'log-fusion' — the latter also sweeps its "
+                         "metric-only twin log-fusion-off) on identical "
+                         "seeds; defaults --days to 14 and skips the F1 "
+                         "sub-campaign")
     ap.add_argument("--mc-seeds", type=int, default=None,
                     help="Monte Carlo mode: run this many seeds per "
                          "scenario through the seed-batched campaign "
@@ -104,7 +106,12 @@ def main():
         args.telemetry_days = 0.0
         args.executor = "serial"
     elif args.preset:
-        args.scenarios = f"reactive,{args.preset}"
+        if args.preset == "log-fusion":
+            # the log channel's deltas (TTD, false drains) are measured
+            # against its metric-only twin on identical schedules
+            args.scenarios = "reactive,log-fusion-off,log-fusion"
+        else:
+            args.scenarios = f"reactive,{args.preset}"
         if args.days is None:
             args.days = 14.0
         args.telemetry_days = 0.0

@@ -1,0 +1,187 @@
+#!/usr/bin/env python
+"""Docs-drift check: README quickstart blocks must stay runnable.
+
+Extracts fenced ``bash`` and ``python`` blocks from README.md and
+validates them against the actual CLI surface, so renaming a flag or a
+module without updating the docs fails CI:
+
+* ``python`` blocks must parse (`ast.parse`);
+* every ``python <script>.py`` / ``python -m <module>`` invocation in a
+  ``bash`` block must reference an existing script/module, and every
+  ``--flag`` it passes must appear in that entry point's ``--help``
+  output (one ``--help`` subprocess per entry point, cached);
+* module paths named in the README module-map table must exist under
+  ``src/repro``.
+
+Run from the repo root: ``python scripts/check_docs.py`` (CI does).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import shlex
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+README = os.path.join(ROOT, "README.md")
+
+_FENCE = re.compile(r"^```(\w*)\s*$")
+# flags whose value we never validate, plus flags argparse always has
+_SKIP_CMDS = ("pip", "cd", "export", "echo")
+
+
+def fenced_blocks(path):
+    """(language, text, first_line_no) for every fenced block."""
+    blocks, lang, buf, start = [], None, [], 0
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            m = _FENCE.match(line)
+            if m and lang is None:
+                lang, buf, start = m.group(1), [], i
+            elif line.rstrip() == "```" and lang is not None:
+                blocks.append((lang, "".join(buf), start))
+                lang = None
+            elif lang is not None:
+                buf.append(line)
+    return blocks
+
+
+def bash_commands(text):
+    """Logical commands: continuation-joined, comments stripped."""
+    joined, acc = [], ""
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line.endswith("\\"):
+            acc += line[:-1] + " "
+            continue
+        joined.append(acc + line)
+        acc = ""
+    if acc:
+        joined.append(acc)
+    return joined
+
+
+class HelpCache:
+    def __init__(self):
+        self._cache = {}
+
+    def help_text(self, argv):
+        key = tuple(argv)
+        if key not in self._cache:
+            env = dict(os.environ)
+            env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+                os.pathsep + env["PYTHONPATH"]
+                if env.get("PYTHONPATH") else "")
+            try:
+                proc = subprocess.run(
+                    [sys.executable, *argv, "--help"], cwd=ROOT, env=env,
+                    capture_output=True, text=True, timeout=120)
+            except subprocess.TimeoutExpired:
+                self._cache[key] = None
+                return None
+            out = proc.stdout + proc.stderr
+            self._cache[key] = out if proc.returncode == 0 else None
+        return self._cache[key]
+
+
+def check_bash_block(text, line_no, helps, errors):
+    for cmd in bash_commands(text):
+        # tolerate VAR=val prefixes (PYTHONPATH=src ...)
+        toks = shlex.split(cmd)
+        while toks and "=" in toks[0] and not toks[0].startswith("-"):
+            toks.pop(0)
+        if not toks or os.path.basename(toks[0]) not in (
+                "python", "python3") or toks[0] in _SKIP_CMDS:
+            continue
+        toks = toks[1:]
+        if toks[:1] == ["-m"]:
+            module = toks[1]
+            if module == "pytest":
+                continue
+            mod_path = os.path.join(ROOT, *module.split(".")) + ".py"
+            pkg_path = os.path.join(ROOT, *module.split("."),
+                                    "__main__.py")
+            src_mod = os.path.join(ROOT, "src", *module.split(".")) + ".py"
+            if not any(os.path.exists(p)
+                       for p in (mod_path, pkg_path, src_mod)):
+                errors.append(f"README.md:{line_no}: module `{module}` "
+                              f"does not exist")
+                continue
+            entry, args = ["-m", module], toks[2:]
+        else:
+            script = toks[0]
+            if not script.endswith(".py"):
+                continue
+            if not os.path.exists(os.path.join(ROOT, script)):
+                errors.append(f"README.md:{line_no}: script `{script}` "
+                              f"does not exist")
+                continue
+            entry, args = [script], toks[1:]
+        flags = [a.split("=", 1)[0] for a in args if a.startswith("--")]
+        if not flags:
+            continue
+        help_text = helps.help_text(entry)
+        if help_text is None:
+            errors.append(f"README.md:{line_no}: `{' '.join(entry)} "
+                          f"--help` failed")
+            continue
+        for flag in flags:
+            if flag not in help_text:
+                errors.append(f"README.md:{line_no}: flag `{flag}` not in "
+                              f"`{' '.join(entry)} --help`")
+
+
+def check_module_map(errors):
+    """Module paths in the README module-map table must exist."""
+    row = re.compile(r"^\|\s*`([^`]+)`")
+    with open(README) as f:
+        for i, line in enumerate(f, 1):
+            m = row.match(line)
+            if not m:
+                continue
+            for part in m.group(1).split("`, `"):
+                part = part.strip()
+                if "/" not in part and "." not in part:
+                    continue        # a preset/flag name, not a path
+                rel = part.rstrip("/")
+                if not re.fullmatch(r"[\w./-]+", rel):
+                    continue
+                candidates = [os.path.join(ROOT, "src", "repro", rel),
+                              os.path.join(ROOT, rel)]
+                if not any(os.path.exists(c) for c in candidates):
+                    errors.append(f"README.md:{i}: module-map path "
+                                  f"`{rel}` does not exist")
+
+
+def main():
+    errors = []
+    helps = HelpCache()
+    n_bash = n_py = 0
+    for lang, text, line_no in fenced_blocks(README):
+        if lang == "python":
+            n_py += 1
+            try:
+                ast.parse(text)
+            except SyntaxError as e:
+                errors.append(f"README.md:{line_no}: python block does "
+                              f"not parse: {e}")
+        elif lang == "bash":
+            n_bash += 1
+            check_bash_block(text, line_no, helps, errors)
+    check_module_map(errors)
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"check_docs: OK ({n_bash} bash blocks, {n_py} python blocks, "
+          f"module map verified)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -48,6 +48,8 @@ from repro.core.failures import DEGRADE_KINDS
 from repro.core.precursor import Alarm, DetectorConfig, evaluate
 from repro.core.session import SessionState
 from repro.control.streaming import StreamingDetector
+from repro.logs.analysis import LogAnalyzer, LogChannelConfig
+from repro.logs.emitter import LogEmitter, _TICK_H
 
 # alarm classification for the infra fault band: a network-degradation
 # signature concentrates its top z-scores in transport/RPC metrics, a
@@ -73,21 +75,36 @@ RESOURCE_ALARM_METRICS = frozenset({
 })
 
 
-def classify_alarm(alarm: Alarm) -> str:
-    """``"net"`` | ``"resource"`` | ``"node"`` from the alarm's top-4
-    attributed metrics (>= 3 votes in one class set)."""
-    top = [m for m, _ in alarm.top_metrics[:4]]
-    if sum(m in NET_ALARM_METRICS for m in top) >= 3:
-        return "net"
-    if sum(m in RESOURCE_ALARM_METRICS for m in top) >= 3:
-        return "resource"
-    return "node"
-
-
 # metric name -> class code for the batched form (0 node, 1 net, 2 res)
 _METRIC_CLASS = {m: 1 for m in NET_ALARM_METRICS}
 _METRIC_CLASS.update({m: 2 for m in RESOURCE_ALARM_METRICS})
 _CLASS_NAMES = ("node", "net", "resource")
+
+
+def _metric_class(m: str) -> int:
+    """Class code for one attributed metric.  Log-channel templates carry
+    their class in the name (``log:net:*`` / ``log:res:*``) — names that
+    never existed before the log channel, so pre-existing campaigns see
+    the exact same codes as the plain dict lookup."""
+    code = _METRIC_CLASS.get(m)
+    if code is not None:
+        return code
+    if m.startswith("log:net:"):
+        return 1
+    if m.startswith("log:res:"):
+        return 2
+    return 0
+
+
+def classify_alarm(alarm: Alarm) -> str:
+    """``"net"`` | ``"resource"`` | ``"node"`` from the alarm's top-4
+    attributed metrics (>= 3 votes in one class set)."""
+    codes = [_metric_class(m) for m, _ in alarm.top_metrics[:4]]
+    if sum(c == 1 for c in codes) >= 3:
+        return "net"
+    if sum(c == 2 for c in codes) >= 3:
+        return "resource"
+    return "node"
 
 
 def classify_alarms(alarms) -> List[str]:
@@ -102,7 +119,7 @@ def classify_alarms(alarms) -> List[str]:
     codes = np.zeros((len(alarms), 4), dtype=np.int8)
     for i, a in enumerate(alarms):
         for j, (m, _) in enumerate(a.top_metrics[:4]):
-            codes[i, j] = _METRIC_CLASS.get(m, 0)
+            codes[i, j] = _metric_class(m)
     net = np.sum(codes == 1, axis=1) >= 3
     res = np.sum(codes == 2, axis=1) >= 3
     kinds = np.where(net, 1, np.where(res, 2, 0))
@@ -132,6 +149,12 @@ class ControlConfig:
     # alarm-informed retry placement
     retry_avoid_alarmed: bool = True
     alarm_memory_h: float = 4.0           # how long an alarm taints a node
+    # log channel (L4-style diagnosis): fuse synthetic-log verdicts with
+    # the metric vote.  Off by default — when off, neither the emitter nor
+    # the analyzer is even constructed, so every pre-existing campaign is
+    # bit-identical (see docs/LOG_CHANNEL.md)
+    log_channel: bool = False
+    log: LogChannelConfig = field(default_factory=LogChannelConfig)
     # control interval: max scrape ticks the engine may emit before the
     # detector sees them (bounds alarm->action latency; 120 ticks = 1 h)
     reaction_ticks: int = 120
@@ -191,6 +214,42 @@ class ControlStats:
                    and f.time_h <= a.time_h <= f.time_h + f.window_h + 0.25
                    for a in self.alarms))
         blind = [f for f in failures if f.kind == "ctrl_blind"]
+        # time-to-detection: per detectable fault, first alarm on the
+        # fault's node inside its activity span, measured from *onset*
+        # (precursor start for gradual XIDs, window open for degrade
+        # faults) — the log channel's whole value proposition is moving
+        # this left without adding false drains
+        ttds = []
+        for f in failures:
+            if f.kind == "ctrl_blind":
+                continue
+            lead = max(getattr(f, "precursor_lead_h", 0.0), 0.0)
+            window = max(getattr(f, "window_h", 0.0), 0.0)
+            onset = f.time_h - lead
+            horizon = f.time_h + window + 0.25
+            hits = [a.time_h for a in self.alarms
+                    if a.node == f.node
+                    and onset - 1e-9 <= a.time_h <= horizon]
+            if hits:
+                ttds.append(min(hits) - onset)
+        # false drains: executed drains on a node with no fault activity
+        # anywhere near the drain time
+        false_drains = 0
+        for d in self.drains:
+            if not d.executed:
+                continue
+            justified = any(
+                f.kind != "ctrl_blind" and f.node == d.node
+                and (f.time_h
+                     - max(getattr(f, "precursor_lead_h", 0.0), 0.5) - 1e-9
+                     <= d.time_h
+                     <= f.time_h + max(getattr(f, "window_h", 0.0), 0.0)
+                     + 0.5)
+                for f in failures)
+            false_drains += 0 if justified else 1
+        n_log_alarms = sum(
+            1 for a in self.alarms
+            if a.top_metrics and a.top_metrics[0][0].startswith("log:"))
         return {
             "n_alarms": float(len(self.alarms)),
             "tp": float(tp),
@@ -211,6 +270,10 @@ class ControlStats:
             "deg_detect_rate": deg_detected / max(len(deg), 1),
             "n_blind_windows": float(len(blind)),
             "blind_h": float(sum(f.window_h for f in blind)),
+            "n_log_alarms": float(n_log_alarms),
+            "ttd_h": float(np.median(ttds)) if ttds else None,
+            "ttd_n": float(len(ttds)),
+            "false_drains": float(false_drains),
         }
 
 
@@ -230,11 +293,22 @@ class ControlPlane:
       reaction latency is bounded by ``reaction_ticks``.
     """
 
-    def __init__(self, config: ControlConfig, urgent_save_s: float):
+    def __init__(self, config: ControlConfig, urgent_save_s: float,
+                 n_nodes: int = 0, seed: int = 0):
         self.cfg = config
         self.urgent_save_s = urgent_save_s
         self.detector = StreamingDetector(config.detector,
                                           backend=config.detector_backend)
+        # log channel: constructed only when the gate is on — the off path
+        # never touches the log subsystem (the bit-identity guarantee)
+        if config.log_channel:
+            self.log: Optional[LogAnalyzer] = LogAnalyzer(config.log)
+            self._log_emitter: Optional[LogEmitter] = LogEmitter(
+                n_nodes, seed,
+                noise_per_node_h=config.log.noise_per_node_h)
+        else:
+            self.log = None
+            self._log_emitter = None
         self.stats = ControlStats()
         self.last_alarm_h: Dict[int, float] = {}
         self.pending_drain: Optional[DrainAction] = None
@@ -255,6 +329,14 @@ class ControlPlane:
         """Register a scheduler-outage window [t0, t1) (campaign setup)."""
         self._blind.append((t0_h, t1_h))
 
+    def register_failures(self, failures) -> None:
+        """Hand the failure schedule to the log emitter (campaign setup,
+        schedule order).  No-op when the log channel is off."""
+        if self._log_emitter is None:
+            return
+        for ev in failures:
+            self._log_emitter.register_failure(ev)
+
     def _blind_at(self, t: float) -> Optional[float]:
         """End of the blind window containing ``t``, if any."""
         for b0, b1 in self._blind:
@@ -274,7 +356,43 @@ class ControlPlane:
         Returns True when emission must halt so a pending drain can run as
         an event at the chunk boundary.
         """
-        return self.apply_alarms(self.detector.push(ts, snap), state)
+        alarms = self.detector.push(ts, snap)
+        if self.log is not None:
+            alarms = self.fuse_alarms(alarms, self.scan_logs(ts, state))
+        return self.apply_alarms(alarms, state)
+
+    def scan_logs(self, ts, state) -> List[Alarm]:
+        """Run the log channel over one chunk's time window: emit the
+        synthetic lines for [ts[0], ts[-1] + tick), score every window the
+        chunk completes, and convert verdicts to :class:`Alarm` records
+        whose ``top_metrics`` carry ``log:<class>:<template>`` names.
+        Called at the same point by both engines (the scalar batcher's
+        chunk and the batched engine's per-seed group scan), so the
+        emitter's per-chunk draws line up bit-for-bit."""
+        if self.log is None:
+            return []
+        t0 = float(ts[0])
+        step = float(ts[1] - ts[0]) if len(ts) > 1 else _TICK_H
+        t1 = float(ts[-1]) + step
+        cur = state.current
+        gang = list(cur.nodes) \
+            if cur is not None and cur.state is SessionState.RUNNING else []
+        lines = self._log_emitter.emit_window(t0, t1, gang)
+        return [
+            Alarm(tick=int(v.time_h / _TICK_H + 1e-9), time_h=v.time_h,
+                  node=v.node, n_signals=len(v.top),
+                  top_metrics=list(v.top))
+            for v in self.log.ingest(lines, t1)]
+
+    @staticmethod
+    def fuse_alarms(metric_alarms: List[Alarm],
+                    log_alarms: List[Alarm]) -> List[Alarm]:
+        """Merge the two channels' alarms into one time-ordered stream.
+        Stable on ties (metric first) so the policy loop — cooldowns,
+        confirmation rings — sees a deterministic order."""
+        if not log_alarms:
+            return metric_alarms
+        return sorted(metric_alarms + log_alarms, key=lambda a: a.time_h)
 
     def apply_alarms(self, alarms, state) -> bool:
         """Map one chunk's alarms to in-span actions (urgent saves, drain

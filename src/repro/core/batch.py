@@ -386,12 +386,14 @@ class BatchedCampaignEngine:
                 B.stores[i] = TimeSeriesStore(cfg.n_nodes)
             if cfg.control is not None:
                 plane = ControlPlane(
-                    cfg.control, urgent_save_s=cfg.checkpoint_save_s)
+                    cfg.control, urgent_save_s=cfg.checkpoint_save_s,
+                    n_nodes=cfg.n_nodes, seed=seed)
                 plane.infra_active = B.has_infra and bool(
                     (B.fails.kind[B.fails.offsets[i]:
                                   B.fails.offsets[i + 1]] >= 3).any())
                 for b0, b1 in blind_windows(evs):
                     plane.begin_blind(b0, b1)
+                plane.register_failures(evs)
                 B.planes[i] = plane
                 B.views[i] = _SeedView(self, B, i)
             B.tel_seeds.append(i)
@@ -860,7 +862,15 @@ class BatchedCampaignEngine:
                     [chunk[s][0] for s in group],
                     [chunk[s][1] for s in group])
                 for s, alarms in zip(group, alarm_lists):
-                    if B.planes[s].apply_alarms(alarms, B.views[s]):
+                    plane = B.planes[s]
+                    if plane.log is not None:
+                        # log channel: same per-chunk fusion point as the
+                        # scalar `ControlPlane.on_chunk` — chunk windows
+                        # are mirrored, so the emitter's draws line up
+                        alarms = plane.fuse_alarms(
+                            alarms, plane.scan_logs(chunk[s][0],
+                                                    B.views[s]))
+                    if plane.apply_alarms(alarms, B.views[s]):
                         t_stop[s] = float(B.next_k[s]) * TICK_H
                         halted.add(s)
             emitting = [s for s in emitting

@@ -714,10 +714,12 @@ class ClusterSim:
             # urgent saves are priced like regular ones: fabric-resolved at
             # the gang fanin when CampaignConfig.storage is set
             ctl = ControlPlane(cfg.control,
-                               urgent_save_s=cfg.checkpoint_save_s)
+                               urgent_save_s=cfg.checkpoint_save_s,
+                               n_nodes=cfg.n_nodes, seed=cfg.seed)
             ctl.infra_active = any(f.kind in INFRA_KINDS for f in failures)
             for b0, b1 in blind_windows(failures):
                 ctl.begin_blind(b0, b1)
+            ctl.register_failures(failures)
             st.control = ctl
         # only drains need a bounded alarm->action latency (they truncate
         # spans); urgent checkpoints apply retroactively at the alarm's own

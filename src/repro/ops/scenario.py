@@ -93,6 +93,11 @@ class Scenario:
     control_drain: bool = False              # confirmed alarm -> drain node
     control_drain_confirm_alarms: int = 3    # same-node alarms that confirm
     control_alarm_memory_h: float = 4.0      # retry placement avoids alarmed
+    # log channel (L4): synthetic operational logs analyzed alongside the
+    # metric vote — template bursts + cross-node references attribute
+    # gang-wide symptoms to a root-cause node, fused into the same alarm
+    # stream.  Requires control_plane; off by default (bit-identity).
+    log_channel: bool = False
     # streaming-detector pass-1 implementation: "numpy" (reference /
     # parity oracle) | "xla" (fused jitted XLA) | "pallas" (TPU kernel).
     # The compiled backends produce the identical alarm set, so campaign
@@ -115,6 +120,10 @@ class Scenario:
             raise ValueError(
                 f"unknown kind_weights categories {sorted(unknown)}; "
                 f"valid: {sorted(FAILURE_CATEGORIES)}")
+        if self.log_channel and not self.control_plane:
+            raise ValueError(
+                "log_channel requires control_plane=True (the log "
+                "analyzer's verdicts fuse into the control loop)")
 
     # -- resolution ---------------------------------------------------------
 
@@ -176,6 +185,7 @@ class Scenario:
             drain=self.control_drain,
             drain_confirm_alarms=self.control_drain_confirm_alarms,
             alarm_memory_h=self.control_alarm_memory_h,
+            log_channel=self.log_channel,
             detector_backend=self.detector_backend)
 
     def to_campaign_config(self, seed: int = 0) -> CampaignConfig:
@@ -374,6 +384,32 @@ PRESETS: Dict[str, Scenario] = {s.name: s for s in [
                     "resource-pressure windows that keep raising alarms.",
         kind_weights={"ctrl_blind": 8.0, "resource_exhaust": 4.0},
         control_plane=True),
+    Scenario(
+        name="log-fusion-off",
+        description="Metric-only twin of log-fusion: the identical infra-"
+                    "heavy schedule, control plane and drain policy, with "
+                    "the log channel off — the baseline the log channel's "
+                    "time-to-detection and false-drain deltas are measured "
+                    "against.",
+        kind_weights={"net_degrade": 4.0, "resource_exhaust": 4.0,
+                      "ctrl_blind": 4.0},
+        control_plane=True,
+        control_drain=True),
+    Scenario(
+        name="log-fusion",
+        description="Log-channel diagnosis fused with the metric vote "
+                    "(L4): a synthetic operational log stream — XID "
+                    "bursts, gang-wide NCCL timeouts, NFS/RPC stall spam, "
+                    "memory-pressure ramps — is template-mined, burst/"
+                    "rarity scored, and root-cause attributed across "
+                    "nodes; verdicts merge into the control loop's alarm "
+                    "stream.  Compare against log-fusion-off for the "
+                    "detection-latency and false-drain deltas.",
+        kind_weights={"net_degrade": 4.0, "resource_exhaust": 4.0,
+                      "ctrl_blind": 4.0},
+        control_plane=True,
+        control_drain=True,
+        log_channel=True),
 ]}
 
 

@@ -337,6 +337,8 @@ class SweepResult:
         ("f4_auto_downtime_h", "auto dt h", 1.0, "{:.2f}"),
         ("f4_manual_downtime_h", "manual dt h", 1.0, "{:.2f}"),
         ("infra_degraded_h", "deg h", 1.0, "{:.2f}"),
+        ("ctrl_ttd_h", "TTD h", 1.0, "{:.2f}"),
+        ("ctrl_false_drains", "false drains", 1.0, "{:.1f}"),
     ]
 
     # distributional columns render from this many seeds up (below that,
@@ -424,8 +426,8 @@ class SweepResult:
     _CONTROL_ONLY_FIELDS = frozenset({
         "name", "description", "control_plane", "control_urgent_checkpoint",
         "control_drain", "control_drain_confirm_alarms",
-        "control_alarm_memory_h", "telemetry", "telemetry_store",
-        "telemetry_pad_metrics",
+        "control_alarm_memory_h", "log_channel", "telemetry",
+        "telemetry_store", "telemetry_pad_metrics",
     })
 
     def _reactive_twin(self, ctl_sc: Scenario) -> Optional[Scenario]:
@@ -467,8 +469,10 @@ class SweepResult:
                     for o in self.outcomes}
         parts.append("| scenario | goodput % | Δ goodput h (vs) | alarms | "
                       "TP | FP/day | urgent saves | saved h/TP | "
-                      "wasted h/FP | drains | crashes dodged |")
-        parts.append("|---|---|---|---|---|---|---|---|---|---|---|")
+                      "wasted h/FP | drains | crashes dodged | "
+                      "log alarms | TTD h | false drains |")
+        parts.append("|---|---|---|---|---|---|---|---|---|---|---|"
+                     "---|---|---|")
 
         def cell(a, key, fmt):
             v = a.get(key)
@@ -509,7 +513,10 @@ class SweepResult:
                 f"{cell(a, 'ctrl_avoided_per_tp_h', '{:.2f}')} | "
                 f"{cell(a, 'ctrl_wasted_per_fp_h', '{:.3f}')} | "
                 f"{cell(a, 'ctrl_n_drains', '{:.1f}')} | "
-                f"{cell(a, 'ctrl_failures_avoided', '{:.1f}')} |")
+                f"{cell(a, 'ctrl_failures_avoided', '{:.1f}')} | "
+                f"{cell(a, 'ctrl_n_log_alarms', '{:.0f}')} | "
+                f"{cell(a, 'ctrl_ttd_h', '{:.2f}')} | "
+                f"{cell(a, 'ctrl_false_drains', '{:.1f}')} |")
         parts += [
             "",
             "Urgent checkpoints are trajectory-preserving (accounting at "
@@ -519,6 +526,15 @@ class SweepResult:
             "positive dodges the crash (and its retry chain) for the price "
             "of a controlled restart; a false positive burns the restart "
             "and a spare for the recheck window.",
+            "",
+            "`log alarms` counts alarms originating from the log channel "
+            "(L4 template/burst verdicts; zero unless `log_channel` is "
+            "on).  `TTD h` is the median time-to-detection from fault "
+            "onset (precursor start / window open) to the first alarm on "
+            "the fault's node; `false drains` counts executed drains with "
+            "no fault activity near the drained node.  Compare "
+            "`log-fusion` against `log-fusion-off` for the log channel's "
+            "deltas.",
             "",
         ]
         return parts
