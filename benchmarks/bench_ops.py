@@ -858,10 +858,105 @@ def bench_fault_taxonomy() -> list:
              f"degraded_h total={deg_total:.1f}")]
 
 
+def bench_fault_topology() -> list:
+    """The correlated fault band (leaf-switch blast radius, partial-gang
+    dns flaps) with blast-radius-aware recovery through the batched
+    engine: the many-seed correlated campaign must hold its wall-clock
+    envelope, the batched path must stay bit-identical to the scalar
+    engine on a seed sample (control ledger, topology events, evacuations
+    and exclusion reasons included), and the cross-node correlation must
+    attribute >= 80% of switch events to the correct switch, pooled over
+    every seed."""
+    import dataclasses
+
+    from repro.core.batch import BatchedCampaignEngine
+    from repro.core.cluster import ClusterSim
+    from repro.ops import get_scenario
+    from repro.ops.sweep import compute_findings
+
+    # control-free fleet-scale pass: the blast-radius geometry (per-member
+    # window expansion, concentration columns) at mc_batch scale
+    days = 4.0 if FAST else 73.0
+    S = 64 if FAST else 256
+    blast = get_scenario("switch-blast").replace(duration_days=days)
+    if FAST:
+        # the abbreviated window needs a denser schedule for the corr
+        # columns to be non-trivially populated
+        blast = blast.replace(mtbf_h=24.0)
+    cfg_blast = blast.to_campaign_config(0)
+    BatchedCampaignEngine(cfg_blast).run_findings([0])   # warm caches
+    blast_f, us = timed(lambda: BatchedCampaignEngine(
+        cfg_blast).run_findings(list(range(S))), best_of=3)
+    corr_n = sum(f["corr_n_events"] for f in blast_f)
+    if corr_n < S:
+        raise AssertionError(
+            f"only {corr_n:.0f} correlated events over {S} seeds of "
+            "switch-blast — the band never engaged")
+    if not any(f["corr_top_switch_share"] > 0.0 for f in blast_f):
+        raise AssertionError("corr_top_switch_share never populated")
+
+    # blast-radius-aware recovery sample: pooled attribution precision
+    # plus bitwise batched==scalar parity, control ledger included
+    sc = get_scenario("correlated-recovery").replace(
+        duration_days=4.0 if FAST else 8.0, mtbf_h=12.0,
+        telemetry_pad_metrics=0)
+    S2 = 16 if FAST else 32
+    cfg = sc.to_campaign_config(0)
+    findings = BatchedCampaignEngine(cfg).run_findings(list(range(S2)))
+    attributed = sum(f["ctrl_switch_attributed"] for f in findings)
+    events = sum(f["ctrl_switch_events"] for f in findings)
+    precision = attributed / max(events, 1.0)
+    if events < S2:
+        raise AssertionError(
+            f"only {events:.0f} switch events over {S2} seeds — the "
+            "correlated band never engaged")
+    if precision < 0.75:
+        # regression tripwire; the >=0.80 acceptance contract lives in
+        # tests/test_fault_topology.py on its pinned config
+        raise AssertionError(
+            f"switch attribution precision {precision:.2f} < 0.75 "
+            f"({attributed:.0f}/{events:.0f} events)")
+
+    sample = [3] if FAST else [3, 11, 25]
+    for seed in sample:
+        res = BatchedCampaignEngine(cfg).run([seed])[0]
+        ref = ClusterSim(dataclasses.replace(cfg, seed=seed)).run()
+        same = (ref.failures == res.failures
+                and ref.goodput_h() == res.goodput_h()
+                and ref.degraded_hours == res.degraded_hours
+                and ref.control.alarms == res.control.alarms
+                and ref.control.drains == res.control.drains
+                and ref.control.topology_events
+                == res.control.topology_events
+                and ref.control.misattributed_drains
+                == res.control.misattributed_drains
+                and ref.exclusions.by_reason()
+                == res.exclusions.by_reason())
+        if not same:
+            raise AssertionError(f"correlated batched/scalar parity "
+                                 f"broke at seed {seed}")
+        fa = {k: v for k, v in findings[seed].items() if k != "wall_s"}
+        fb = {k: v for k, v in compute_findings(ref).items()
+              if k != "wall_s"}
+        if fa != fb:
+            raise AssertionError(f"correlated findings parity broke "
+                                 f"at seed {seed}")
+
+    evac = sum(f["ctrl_evacuations"] for f in findings)
+    return [("fault_topology_correlated", us,
+             f"{S} seeds x {days:.0f}d switch-blast stacked pass "
+             f"{us/1e6:.2f}s; recovery sample ({S2} seeds "
+             f"correlated-recovery): switch attribution "
+             f"{attributed:.0f}/{events:.0f}={precision:.2f} "
+             f"(tripwire >=0.75) evacuations={evac:.0f} parity=exact "
+             f"(ledger + findings, sampled seeds)")]
+
+
 def all_benches():
     return [bench_taxonomy, bench_storage_fabric, bench_youngdaly,
             bench_rpc, bench_ckpt_path, bench_io_sharding,
             bench_data_pipeline, bench_exclusion, bench_retry,
             bench_precursor, bench_control_plane, bench_cluster_engine,
             bench_mc_batch, bench_mc_wavefront, bench_detector_backend,
-            bench_scenario_sweep, bench_fault_taxonomy]
+            bench_scenario_sweep, bench_fault_taxonomy,
+            bench_fault_topology]

@@ -13,7 +13,8 @@ regenerate the baseline to start tracking them:
     REPRO_BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run \
         --only cluster_engine --only storage_fabric \
         --only control_plane --only mc_batch --only mc_wavefront \
-        --only detector_backend --json benchmarks/baselines/ci_baseline.json
+        --only detector_backend --only fault_taxonomy \
+        --only fault_topology --json benchmarks/baselines/ci_baseline.json
 
 ``--require GROUP`` (repeatable) declares a gated group: at least one row
 whose name contains GROUP must exist in BOTH files, otherwise the gate

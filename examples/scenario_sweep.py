@@ -91,12 +91,22 @@ def main():
                          "jitted XLA — the fast path off-TPU), pallas "
                          "(TPU kernel).  Alarm sets are identical across "
                          "backends; this trades wall-clock only")
+    ap.add_argument("--list-presets", action="store_true",
+                    help="print every scenario preset with its one-line "
+                         "description and exit")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny deterministic CI sweep: paper-faithful + "
                          "storage-fabric + proactive + infra-faults, "
                          "1 seed, 3 days, serial, no F1, plus an mc_seeds "
                          "spot check")
     args = ap.parse_args()
+
+    if args.list_presets:
+        width = max(len(n) for n in list_scenarios())
+        for name in list_scenarios():
+            sc = get_scenario(name)
+            print(f"{name:<{width}}  {sc.description}")
+        return
 
     if args.smoke:
         args.scenarios = "paper-faithful,storage-fabric,proactive," \

@@ -44,9 +44,10 @@ from typing import Dict, List, Optional, Set
 
 import numpy as np
 
-from repro.core.failures import DEGRADE_KINDS
+from repro.core.failures import CORRELATED_KINDS, DEGRADE_KINDS
 from repro.core.precursor import Alarm, DetectorConfig, evaluate
 from repro.core.session import SessionState
+from repro.core.topology import ClusterTopology
 from repro.control.streaming import StreamingDetector
 from repro.logs.analysis import LogAnalyzer, LogChannelConfig
 from repro.logs.emitter import LogEmitter, _TICK_H
@@ -155,6 +156,17 @@ class ControlConfig:
     # bit-identical (see docs/LOG_CHANNEL.md)
     log_channel: bool = False
     log: LogChannelConfig = field(default_factory=LogChannelConfig)
+    # blast-radius-aware recovery (correlated fault band): attribute a
+    # gang-wide alarm burst to the shared leaf switch (Mycroft-style:
+    # indict the root cause, not the symptomatic members), suppress
+    # member drains while the switch is indicted, and avoid re-placing
+    # the gang under a degraded switch.  Off by default — the topology
+    # is then never constructed, so pre-band campaigns stay bit-identical
+    blast_radius_aware: bool = False
+    topology_fanout: int = 8              # leaf-switch fanout (topology.py)
+    switch_confirm_members: int = 3       # distinct members that indict...
+    switch_window_h: float = 0.5          # ...inside this window
+    switch_avoid_h: float = 2.0           # indictment / placement-avoid span
     # control interval: max scrape ticks the engine may emit before the
     # detector sees them (bounds alarm->action latency; 120 ticks = 1 h)
     reaction_ticks: int = 120
@@ -174,6 +186,9 @@ class DrainAction:
     node: int
     alarm_idx: int
     executed: bool                        # False: state changed before drain
+    evacuate: bool = False                # blast-radius evacuation: the gang
+                                          #   moves off an indicted switch's
+                                          #   rack, not off a sick node
 
 
 @dataclass
@@ -190,6 +205,17 @@ class ControlStats:
                                           # (time_h, node, alarm_idx): net
                                           #   alarms waited out, not drained
     alarms_deferred: int = 0              # alarms queued in blind windows
+    # correlated fault band responses
+    topology_events: List[tuple] = field(default_factory=list)
+                                          # (time_h, switch, n_members):
+                                          #   gang-wide burst attributed to
+                                          #   the shared leaf switch
+    misattributed_drains: int = 0         # executed drains on a member of
+                                          #   an actively-indicted switch
+    switch_avoid_h: float = 2.0           # indictment span per topology
+                                          #   event (set from ControlConfig;
+                                          #   summarize scores attribution
+                                          #   over the whole span)
 
     @property
     def n_drains(self) -> int:
@@ -236,7 +262,9 @@ class ControlStats:
         # anywhere near the drain time
         false_drains = 0
         for d in self.drains:
-            if not d.executed:
+            if not d.executed or d.evacuate:
+                # evacuations are deliberate fabric-cause moves, not
+                # per-node failure predictions — they score separately
                 continue
             justified = any(
                 f.kind != "ctrl_blind" and f.node == d.node
@@ -250,6 +278,19 @@ class ControlStats:
         n_log_alarms = sum(
             1 for a in self.alarms
             if a.top_metrics and a.top_metrics[0][0].startswith("log:"))
+        # correlated-band attribution: a switch event counts as attributed
+        # when a topology event's indictment span overlaps the event's
+        # activity window (small slack for chunked emission + persistence)
+        # — back-to-back events on a still-indicted switch are attributed
+        # by the standing indictment, not a second topology event
+        corr = [f for f in failures if f.kind in CORRELATED_KINDS]
+        sw_fails = [f for f in corr if f.kind == "switch_degrade"]
+        sw_attr = sum(
+            1 for f in sw_fails
+            if any(e[1] == f.switch
+                   and e[0] <= f.time_h + f.window_h + 0.25
+                   and e[0] + self.switch_avoid_h > f.time_h - 1e-9
+                   for e in self.topology_events))
         return {
             "n_alarms": float(len(self.alarms)),
             "tp": float(tp),
@@ -274,6 +315,14 @@ class ControlStats:
             "ttd_h": float(np.median(ttds)) if ttds else None,
             "ttd_n": float(len(ttds)),
             "false_drains": float(false_drains),
+            "corr_events": float(len(corr)),
+            "switch_events": float(len(sw_fails)),
+            "switch_attributed": float(sw_attr),
+            "switch_attr_rate": sw_attr / max(len(sw_fails), 1),
+            "n_topology_events": float(len(self.topology_events)),
+            "misattributed_drains": float(self.misattributed_drains),
+            "evacuations": float(sum(1 for d in self.drains
+                                     if d.executed and d.evacuate)),
         }
 
 
@@ -309,7 +358,7 @@ class ControlPlane:
         else:
             self.log = None
             self._log_emitter = None
-        self.stats = ControlStats()
+        self.stats = ControlStats(switch_avoid_h=config.switch_avoid_h)
         self.last_alarm_h: Dict[int, float] = {}
         self.pending_drain: Optional[DrainAction] = None
         self._last_urgent_h = -1e18
@@ -324,6 +373,16 @@ class ControlPlane:
         # carries infra-band events (set by the engines at setup); noise
         # alarms in pre-band campaigns keep the legacy urgent-save path
         self.infra_active = False
+        # blast-radius-aware recovery: the topology is constructed only
+        # when the gate is on — the off path never touches the topology
+        # layer (the bit-identity guarantee, same shape as the log channel)
+        if config.blast_radius_aware:
+            self.topology: Optional[ClusterTopology] = ClusterTopology(
+                max(n_nodes, 1), config.topology_fanout)
+        else:
+            self.topology = None
+        self._switch_alarms: Dict[int, List[tuple]] = {}  # sw -> (t, node)
+        self._switch_until: Dict[int, float] = {}         # sw -> indicted til
 
     def begin_blind(self, t0_h: float, t1_h: float):
         """Register a scheduler-outage window [t0, t1) (campaign setup)."""
@@ -421,7 +480,11 @@ class ControlPlane:
                 # network degradation: throttle and wait the window out —
                 # no urgent save (the gang still runs), no drain (the
                 # fabric, not the node, is the bottleneck), no placement
-                # taint (the node is healthy)
+                # taint (the node is healthy).  Blast-radius attribution
+                # feeds on exactly these alarms: a burst of them across one
+                # switch's members indicts the switch, not the nodes
+                if self._note_topology(alarm, idx, state):
+                    halt = True
                 self.stats.throttles.append((alarm.time_h, alarm.node, idx))
                 continue
             self.last_alarm_h[alarm.node] = alarm.time_h
@@ -435,11 +498,88 @@ class ControlPlane:
                     >= cfg.urgent_cooldown_h:
                 self._urgent_save(alarm.time_h, alarm.node, idx, state)
             if cfg.drain and self.pending_drain is None \
-                    and self._confirmed(alarm):
+                    and self._confirmed(alarm) \
+                    and not self._switch_indicted(alarm.node, alarm.time_h):
                 self.pending_drain = DrainAction(alarm.time_h, alarm.node,
                                                  idx, executed=False)
                 halt = True
         return halt
+
+    # -- blast-radius attribution (correlated fault band) --------------------
+
+    def _note_topology(self, alarm: Alarm, idx: int = -1,
+                       state=None) -> bool:
+        """Mycroft-style cross-node correlation: record a net-class alarm
+        against the emitting node's leaf switch; once
+        ``switch_confirm_members`` *distinct* members alarm inside
+        ``switch_window_h``, the burst is attributed to the shared switch
+        (one topology event) and the switch is indicted for
+        ``switch_avoid_h`` — member drains are suppressed, retry placement
+        avoids the whole rack, and (when a gang is running on the rack) an
+        evacuation drain is proposed.  Returns True when the caller must
+        halt emission for that evacuation."""
+        if self.topology is None \
+                or not 0 <= alarm.node < self.topology.n_nodes:
+            return False
+        sw = self.topology.switch_of(alarm.node)
+        ring = self._switch_alarms.setdefault(sw, [])
+        ring.append((alarm.time_h, alarm.node))
+        cutoff = alarm.time_h - self.cfg.switch_window_h
+        ring[:] = [(t, n) for t, n in ring if t >= cutoff]
+        distinct = {n for _, n in ring}
+        if len(distinct) >= self.cfg.switch_confirm_members \
+                and alarm.time_h >= self._switch_until.get(sw, -1e18):
+            self.stats.topology_events.append(
+                (alarm.time_h, sw, len(distinct)))
+            self._switch_until[sw] = alarm.time_h + self.cfg.switch_avoid_h
+            return self._propose_evacuation(alarm, sw, idx, state)
+        return False
+
+    def _propose_evacuation(self, alarm: Alarm, sw: int, idx: int,
+                            state) -> bool:
+        """Blast-radius-aware recovery: the moment a burst is attributed
+        to a switch, evacuate the running gang off its rack behind a final
+        checkpoint — the redeploy's placement (:meth:`avoid_nodes`) keeps
+        the new gang clear of the indicted switch, so the whole blast
+        radius stops charging degraded hours.  Rides the ordinary drain
+        machinery (pending action, chunk halt, execution at the boundary)
+        so both campaign engines stay bit-identical."""
+        if state is None or not self.cfg.drain \
+                or self.pending_drain is not None:
+            return False
+        cur = state.current
+        if cur is None or cur.state is not SessionState.RUNNING:
+            return False
+        in_gang = sorted(set(self.topology.members(sw)) & set(cur.nodes))
+        if not in_gang:
+            return False
+        node = alarm.node if alarm.node in cur.nodes else in_gang[0]
+        self.pending_drain = DrainAction(alarm.time_h, node, idx,
+                                         executed=False, evacuate=True)
+        return True
+
+    def _switch_indicted(self, node: int, t: float) -> bool:
+        """True while ``node``'s leaf switch is under an active indictment
+        — the root cause is the fabric, so the member must not be drained."""
+        if self.topology is None \
+                or not 0 <= node < self.topology.n_nodes:
+            return False
+        return t < self._switch_until.get(self.topology.switch_of(node),
+                                          -1e18)
+
+    def switch_reasons(self, t0: float, t1: float) -> Dict[int, str]:
+        """Exclusion attribution for the tracker: every member of a switch
+        whose indictment overlaps [t0, t1) carries reason ``"switch"`` —
+        the correlated band's contribution to the F3 concentration ledger.
+        Empty when the blast-radius gate is off (pre-band bit-identity)."""
+        if self.topology is None or not self.stats.topology_events:
+            return {}
+        out: Dict[int, str] = {}
+        for tev, sw, _n in self.stats.topology_events:
+            if tev < t1 and tev + self.cfg.switch_avoid_h > t0:
+                for node in self.topology.members(sw):
+                    out.setdefault(node, "switch")
+        return out
 
     def _confirmed(self, alarm: Alarm) -> bool:
         """Alarm-clustering confirmation: real precursors flap (many alarms
@@ -473,6 +613,7 @@ class ControlPlane:
                 if self.infra_active else [None] * len(queued)
             for (alarm, idx), kind in zip(queued, kinds):
                 if kind == "net":
+                    self._note_topology(alarm, idx, state)
                     self.stats.throttles.append((alarm.time_h, alarm.node,
                                                  idx))
                     continue
@@ -487,13 +628,22 @@ class ControlPlane:
                         >= cfg.urgent_cooldown_h:
                     self._urgent_save(t, alarm.node, idx, state)
                 if cfg.drain and self.pending_drain is None \
-                        and self._confirmed(alarm):
+                        and self._confirmed(alarm) \
+                        and not self._switch_indicted(alarm.node, t):
                     self.pending_drain = DrainAction(t, alarm.node, idx,
                                                      executed=False)
         if self.pending_drain is None:
             return
         act = self.pending_drain
         self.pending_drain = None
+        if not act.evacuate and self._switch_indicted(act.node, t):
+            # the indictment landed after this drain was confirmed: the
+            # burst belongs to the node's leaf switch, so draining the
+            # member would misattribute a fabric fault to a healthy node —
+            # record the near-miss and stand down
+            self.stats.misattributed_drains += 1
+            self.stats.drains.append(act)
+            return
         cur = state.current
         spares = sum(1 for nd in state.sched.nodes if nd.free)
         if (cur is None or cur.state is not SessionState.RUNNING
@@ -511,7 +661,8 @@ class ControlPlane:
                             redeploy_h=self.cfg.drain_redeploy_h,
                             recheck_h=self.cfg.drain_recheck_h)
         self.stats.drains.append(DrainAction(t, act.node, act.alarm_idx,
-                                             executed=True))
+                                             executed=True,
+                                             evacuate=act.evacuate))
 
     def avoid_nodes(self, t: float) -> Optional[Set[int]]:
         """Nodes a retry allocation should place last (recent alarms)."""
@@ -519,4 +670,11 @@ class ControlPlane:
             return None
         cutoff = t - self.cfg.alarm_memory_h
         avoid = {n for n, th in self.last_alarm_h.items() if th >= cutoff}
+        if self.topology is not None:
+            # blast-radius-aware placement: while a switch is indicted,
+            # every node behind it places last — a retry gang re-formed
+            # under a degraded switch inherits the whole blast radius
+            for sw, until in self._switch_until.items():
+                if t < until:
+                    avoid.update(self.topology.members(sw))
         return avoid or None

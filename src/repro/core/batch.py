@@ -45,10 +45,10 @@ from repro.core.cluster import (RNG_STREAM_MANUAL, RNG_STREAM_STRUCT,
                                 TICK_H, _MAX_SPAN_TICKS, CampaignConfig,
                                 CampaignResult, ClusterSim)
 from repro.core.exclusion import ExclusionInterval, ExclusionTracker
-from repro.core.failures import (DEGRADE_KINDS, KIND_NAMES, FailureBatch,
-                                 FailureInjector, blind_windows,
-                                 degradation_windows, degraded_overlap_h,
-                                 escalation_events)
+from repro.core.failures import (CORRELATED_KINDS, DEGRADE_KINDS,
+                                 KIND_NAMES, FailureBatch, FailureInjector,
+                                 blind_windows, degradation_windows,
+                                 degraded_overlap_h, escalation_events)
 from repro.core.retry import Attempt, Chain, RetryEngine, RetryPolicy
 from repro.core.session import Session, SessionState
 from repro.core.xid import XID_TABLE
@@ -381,6 +381,12 @@ class BatchedCampaignEngine:
                         ev.slow_factor, ev.kind, ev.onset)
                 elif ev.kind == "ctrl_blind" and ev.window_h > 0:
                     exp.begin_outage(ev.time_h, ev.time_h + ev.window_h)
+                elif ev.kind in CORRELATED_KINDS and ev.window_h > 0:
+                    # correlated band: co-degrade the whole blast radius
+                    # (mirrors the scalar `_make_telemetry` registration)
+                    exp.begin_link_degradation(
+                        sorted(set(ev.members) | set(ev.peers)),
+                        ev.time_h, ev.time_h + ev.window_h, ev.slow_factor)
             B.exporters[i] = exp
             if retain:
                 B.stores[i] = TimeSeriesStore(cfg.n_nodes)
@@ -544,8 +550,19 @@ class BatchedCampaignEngine:
 
     def _record_session(self, B: _Batch, s: int, t0: float, t1: float):
         """Exclusion bookkeeping for a finished session (the tracker's
-        ``record_session`` in accumulator form + a replay log)."""
+        ``record_session`` in accumulator form + a replay log).  Mirrors
+        `_CampaignState.exclusion_reasons`: the isolation ledger first,
+        then the control plane's switch indictments (same setdefault
+        order, so the replayed tracker matches the scalar one)."""
         iso = B.isolated[s]
+        plane = B.planes[s]
+        if plane is not None:
+            sw = plane.switch_reasons(t0, t1)
+            if sw:
+                merged = dict(iso)
+                for node, why in sw.items():
+                    merged.setdefault(node, why)
+                iso = merged
         npart = B.npart_idx[s]
         B.npart_all[s].extend(npart)
         B.n_intervals[s] += len(npart)
@@ -885,7 +902,8 @@ class BatchedCampaignEngine:
         injector = FailureInjector(
             n_nodes=cfg.n_nodes, mtbf_h=cfg.mtbf_h,
             hot_fraction=cfg.hot_fraction, hot_weight=cfg.hot_weight,
-            kind_weights=cfg.kind_weights, seed=cfg.seed)
+            kind_weights=cfg.kind_weights,
+            topology_fanout=cfg.topology_fanout, seed=cfg.seed)
         fails = injector.sample_batch(cfg.duration_h, seeds)
         B = _Batch(cfg, seeds, fails, materialize)
         self._setup_telemetry(B)
@@ -1135,7 +1153,15 @@ class BatchedCampaignEngine:
         deg_h = float(np.sum(B.degraded[i]))
         goodput_h = run - float(np.sum(lost)) - ckpt_h - urgent_h - deg_h
         o0, o1 = int(B.fails.offsets[i]), int(B.fails.offsets[i + 1])
-        infra_n = int((B.fails.kind[o0:o1] >= 3).sum())
+        kslice = B.fails.kind[o0:o1]
+        infra_n = int((kslice >= 3).sum())
+        # correlated band: event count and switch concentration (share of
+        # switch_degrade events landing on the busiest switch — the F3
+        # analogue at rack granularity)
+        corr_n = int((kslice >= 6).sum())
+        sw_ids = B.fails.switch[o0:o1][kslice == 6]
+        corr_top = float(np.bincount(sw_ids).max() / len(sw_ids)) \
+            if len(sw_ids) else 0.0
         out = {
             "occupancy": min(run / duration, 1.0),
             "goodput": max(goodput_h, 0.0) / duration,
@@ -1153,6 +1179,8 @@ class BatchedCampaignEngine:
             "f4_manual_downtime_h": float(np.median(mans)) if mans else None,
             "infra_n_events": float(infra_n),
             "infra_degraded_h": deg_h,
+            "corr_n_events": float(corr_n),
+            "corr_top_switch_share": corr_top,
         }
         if plane is not None:
             ctl = plane.stats.summarize(B.fails.events(i), duration)

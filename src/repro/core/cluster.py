@@ -40,8 +40,8 @@ from repro.checkpoint.youngdaly import MTBF_H_PAPER
 from repro.control.policy import ControlConfig, ControlPlane, ControlStats
 from repro.core.exclusion import ExclusionTracker
 from repro.storage.fabric import FabricConfig, StorageFabric
-from repro.core.failures import (DEGRADE_KINDS, FailureEvent,
-                                 FailureInjector, INFRA_KINDS,
+from repro.core.failures import (CORRELATED_KINDS, DEGRADE_KINDS,
+                                 FailureEvent, FailureInjector, INFRA_KINDS,
                                  blind_windows, degradation_windows,
                                  degraded_overlap_h, escalation_events)
 from repro.core.retry import Attempt, Chain, RetryConfig, RetryEngine
@@ -116,6 +116,8 @@ class CampaignConfig:
     hot_fraction: float = 0.05
     hot_weight: float = 0.55
     kind_weights: Optional[Dict[str, float]] = None
+    topology_fanout: int = 8                 # leaf-switch fanout (the blast
+                                             #   radius of switch_degrade)
     telemetry: bool = False
     telemetry_pad_metrics: Optional[int] = None   # None -> full 275-metric pad
     telemetry_store: bool = True             # False: stream-and-discard (the
@@ -281,6 +283,18 @@ class _CampaignState:
         if d:
             self.degraded.append(d)
 
+    def exclusion_reasons(self, t0: float, t1: float) -> Dict[int, str]:
+        """Per-node exclusion attribution for a session interval: the
+        isolation ledger first (first-reason-wins in the tracker), then the
+        control plane's correlated-band switch indictments — members of an
+        indicted switch that were never individually isolated still
+        concentrate exclusion intervals on the rack (reason ``"switch"``)."""
+        reasons = dict(self.isolated)
+        if self.control is not None:
+            for node, why in self.control.switch_reasons(t0, t1).items():
+                reasons.setdefault(node, why)
+        return reasons
+
     def fail_session(self, t: float, kind: str, xid=None):
         self.account_degradation(t)
         self.last_fail_hardware = kind == "unreachable" or (
@@ -293,7 +307,8 @@ class _CampaignState:
         self.sched.release(self.current, t)
         self.exclusions.record_session(self.current.created_h, t,
                                        self.current.nodes,
-                                       dict(self.isolated))
+                                       self.exclusion_reasons(
+                                           self.current.created_h, t))
         self.current = None
         if self.down_since is None:
             self.down_since = t
@@ -488,7 +503,7 @@ class _CampaignState:
         s.transition(SessionState.TERMINATED, t)
         self.sched.release(s, t)
         self.exclusions.record_session(s.created_h, t, s.nodes,
-                                       dict(self.isolated))
+                                       self.exclusion_reasons(s.created_h, t))
         self.current = None
         self.isolated[node] = "predictive drain"
         self.sched.exclude(node, t, "predictive drain (control plane)")
@@ -510,7 +525,9 @@ class _CampaignState:
             self.exclusions.record_session(self.current.created_h,
                                            cfg.duration_h,
                                            self.current.nodes,
-                                           dict(self.isolated))
+                                           self.exclusion_reasons(
+                                               self.current.created_h,
+                                               cfg.duration_h))
             self.current.transition(SessionState.TERMINATING, cfg.duration_h)
             self.current.transition(SessionState.TERMINATED, cfg.duration_h)
         return CampaignResult(
@@ -651,6 +668,7 @@ class ClusterSim:
                                hot_fraction=cfg.hot_fraction,
                                hot_weight=cfg.hot_weight,
                                kind_weights=cfg.kind_weights,
+                               topology_fanout=cfg.topology_fanout,
                                seed=cfg.seed)
 
     def _make_telemetry(self, failures):
@@ -683,6 +701,12 @@ class ClusterSim:
                     ev.slow_factor, ev.kind, ev.onset)
             elif ev.kind == "ctrl_blind" and ev.window_h > 0:
                 exporters.begin_outage(ev.time_h, ev.time_h + ev.window_h)
+            elif ev.kind in CORRELATED_KINDS and ev.window_h > 0:
+                # correlated band: one fabric event co-degrades the whole
+                # blast radius (switch members, or the flapping peer's gang)
+                exporters.begin_link_degradation(
+                    sorted(set(ev.members) | set(ev.peers)),
+                    ev.time_h, ev.time_h + ev.window_h, ev.slow_factor)
         return exporters, store
 
     def run(self) -> CampaignResult:

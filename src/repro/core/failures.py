@@ -37,6 +37,18 @@ P_RESOURCE_EXHAUST = 0.06           # host memory / ephemeral-disk pressure
 P_CTRL_BLIND = 0.03                 # scheduler / control-plane outages
 P_RESOURCE_ESCALATE = 0.35          # pressure windows that end in a crash
 
+# correlated fault band (opt-in via ``kind_weights``, like the infra band;
+# calibration anchors are the switch/network category rates in "Revisiting
+# Reliability"): failures that live in the *fabric*, not a node
+P_SWITCH_DEGRADE = 0.05             # leaf switch degrades its whole rack
+P_DNS_FLAP = 0.04                   # service-discovery flap: partial gang
+                                    #   loses connectivity to specific peers
+
+# dedicated stream for dns_flap member-subset draws; constructed lazily and
+# consumed only when a dns_flap event exists, so band-off schedules never
+# touch it (docs/PARITY.md)
+RNG_STREAM_CORR = 7039
+
 # scenario-facing failure categories (ops/scenario.py tilts these weights)
 CATEGORY_OF_XID = {
     145: "nvlink", 149: "nvlink",
@@ -47,12 +59,16 @@ CATEGORY_OF_XID = {
 }
 FAILURE_CATEGORIES = frozenset(CATEGORY_OF_XID.values()) \
     | {"unreachable", "fail_slow",
-       "net_degrade", "resource_exhaust", "ctrl_blind"}
+       "net_degrade", "resource_exhaust", "ctrl_blind",
+       "switch_degrade", "dns_flap"}
 
 # the degrade-don't-kill band: faults that open a window instead of
 # killing a session outright
 DEGRADE_KINDS = frozenset({"net_degrade", "resource_exhaust"})
-INFRA_KINDS = DEGRADE_KINDS | {"ctrl_blind"}
+# the correlated band: fabric faults whose blast radius spans several
+# nodes at once (a rack behind one leaf switch, a flapping peer's gang)
+CORRELATED_KINDS = frozenset({"switch_degrade", "dns_flap"})
+INFRA_KINDS = DEGRADE_KINDS | {"ctrl_blind"} | CORRELATED_KINDS
 
 
 @dataclass
@@ -68,6 +84,10 @@ class FailureEvent:
     window_h: float = 0.0           # >0: event opens a [t, t+window_h) window
     onset: str = ""                 # "" | "gradual" | "spike"
     escalate: bool = False          # resource window ends in a process crash
+    # correlated fault band: blast-radius geometry
+    switch: int = -1                # switch_degrade: the degraded leaf switch
+    members: tuple = ()             # nodes inside the blast radius
+    peers: tuple = ()               # dns_flap: the unreachable peer(s)
 
     @property
     def is_hardware(self) -> bool:
@@ -78,6 +98,10 @@ class FailureEvent:
     @property
     def is_degrade(self) -> bool:
         return self.kind in DEGRADE_KINDS
+
+    @property
+    def is_correlated(self) -> bool:
+        return self.kind in CORRELATED_KINDS
 
 
 @dataclass
@@ -98,6 +122,9 @@ class FailureInjector:
     # ("nvlink" | "ecc" | "dropout" | "exec" | "app" | "unreachable" |
     #  "fail_slow"); the mix is renormalised after tilting
     kind_weights: Optional[Dict[str, float]] = None
+    # leaf-switch fanout for the correlated band's blast radius
+    # (core/topology.py; only consulted when correlated events exist)
+    topology_fanout: int = 8
 
     def node_hazard(self) -> np.ndarray:
         return self.node_hazard_for(self.seed)
@@ -136,6 +163,8 @@ class FailureInjector:
         kind_is_net = np.array([k[0] == "net_degrade" for k in kinds])
         kind_is_res = np.array([k[0] == "resource_exhaust" for k in kinds])
         kind_is_blind = np.array([k[0] == "ctrl_blind" for k in kinds])
+        kind_is_switch = np.array([k[0] == "switch_degrade" for k in kinds])
+        kind_is_dns = np.array([k[0] == "dns_flap" for k in kinds])
         kind_xid = np.array([k[1] if k[1] is not None else -1
                              for k in kinds], dtype=np.int64)
         from repro.core.xid import XID_TABLE
@@ -144,6 +173,12 @@ class FailureInjector:
                             for k in kinds])
         kind_code = np.array([_KIND_CODES[k[0]] for k in kinds],
                              dtype=np.int8)
+
+        # blast-radius lookup for the correlated band — deterministic and
+        # draw-free, so building it cannot perturb any rng stream
+        from repro.core.topology import ClusterTopology
+        topo = ClusterTopology(self.n_nodes, self.topology_fanout)
+        node_switch = topo.switch_map()
 
         block = max(int(duration_h / self.mtbf_h * 1.5) + 8, 16)
         cols = []
@@ -162,7 +197,8 @@ class FailureInjector:
                 cols.append((times, np.empty(0, np.int64),
                              np.empty(0, np.int64), np.empty(0),
                              np.empty(0), np.empty(0),
-                             np.empty(0, np.int8), np.empty(0, bool)))
+                             np.empty(0, np.int8), np.empty(0, bool),
+                             np.empty(0, np.int64), [], []))
                 continue
             nodes = rng.choice(self.n_nodes, size=k, p=hazard)
             kind_idx = rng.choice(len(kinds), size=k, p=probs)
@@ -192,11 +228,47 @@ class FailureInjector:
             onset = np.where(is_res, np.where(onset_u < 0.5, 1, 2),
                              np.where(is_net, 2, 0)).astype(np.int8)
             escalate = is_res & (esc_u < P_RESOURCE_ESCALATE)
+            # correlated band geometry REUSES the win_u / sev_u uniforms
+            # drawn above — zero extra draws on the main stream, so
+            # band-off schedules stay bit-identical (docs/PARITY.md)
+            is_switch = kind_is_switch[kind_idx]
+            is_dns = kind_is_dns[kind_idx]
+            windows = np.where(
+                is_switch, 1.0 + 3.0 * win_u,
+                np.where(is_dns, 0.1 + 0.3 * win_u, windows))
+            slows = np.where(
+                is_switch, 1.2 + 0.6 * sev_u,
+                np.where(is_dns, 1.05 + 0.25 * sev_u, slows))
+            onset = np.where(is_switch | is_dns, 2, onset).astype(np.int8)
+            # switch identity is a deterministic lookup on the already-
+            # sampled node — no draw
+            switch = np.where(is_switch, node_switch[nodes], -1)
             windows = self._clip_windows(times, nodes, windows,
                                          is_net | is_res, is_blind,
-                                         duration_h)
+                                         duration_h,
+                                         is_switch, switch, is_dns)
+            members = [()] * k
+            peers = [()] * k
+            corr_idx = np.nonzero(is_switch | is_dns)[0]
+            if corr_idx.size:
+                # dns member subsets go on a dedicated stream, consumed
+                # in schedule order and only when correlated events exist
+                rng_corr = np.random.default_rng([seed, RNG_STREAM_CORR])
+                for j in corr_idx:
+                    if is_switch[j]:
+                        members[j] = topo.members(int(switch[j]))
+                    else:
+                        peer = int(nodes[j])
+                        size = int(rng_corr.integers(2, 7))
+                        cand = np.delete(np.arange(self.n_nodes), peer)
+                        pick = rng_corr.choice(len(cand),
+                                               size=min(size, len(cand)),
+                                               replace=False)
+                        members[j] = tuple(sorted(int(cand[p])
+                                                  for p in pick))
+                        peers[j] = (peer,)
             cols.append((times, nodes, kind_idx, leads, slows,
-                         windows, onset, escalate))
+                         windows, onset, escalate, switch, members, peers))
 
         counts = [len(c[0]) for c in cols]
         offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
@@ -207,7 +279,8 @@ class FailureInjector:
                 nodes=np.empty(0, np.int64), kind=np.empty(0, np.int8),
                 xid=np.empty(0, np.int64), hardware=np.empty(0, bool),
                 leads=empty_f, slows=empty_f, windows=np.empty(0),
-                onset=np.empty(0, np.int8), escalate=np.empty(0, bool))
+                onset=np.empty(0, np.int8), escalate=np.empty(0, bool),
+                switch=np.empty(0, np.int64), members=[], peers=[])
         times = np.concatenate([c[0] for c in cols if len(c[0])])
         nodes = np.concatenate([c[1] for c in cols if len(c[0])])
         kind_idx = np.concatenate([c[2] for c in cols if len(c[0])])
@@ -216,21 +289,27 @@ class FailureInjector:
         windows = np.concatenate([c[5] for c in cols if len(c[0])])
         onset = np.concatenate([c[6] for c in cols if len(c[0])])
         escalate = np.concatenate([c[7] for c in cols if len(c[0])])
+        switch = np.concatenate([c[8] for c in cols if len(c[0])])
+        members = [m for c in cols if len(c[0]) for m in c[9]]
+        peers = [p for c in cols if len(c[0]) for p in c[10]]
         return FailureBatch(
             seeds=list(seeds), offsets=offsets, times=times,
             nodes=nodes.astype(np.int64), kind=kind_code[kind_idx],
             xid=kind_xid[kind_idx], hardware=kind_hw[kind_idx],
             leads=leads, slows=slows, windows=windows,
-            onset=onset.astype(np.int8), escalate=escalate.astype(bool))
+            onset=onset.astype(np.int8), escalate=escalate.astype(bool),
+            switch=switch.astype(np.int64), members=members, peers=peers)
 
     @staticmethod
-    def _clip_windows(times, nodes, windows, is_deg, is_blind, duration_h):
+    def _clip_windows(times, nodes, windows, is_deg, is_blind, duration_h,
+                      is_switch=None, switch_ids=None, is_dns=None):
         """Deterministic (draw-free) window clipping: a degradation window
         ends no later than the next window-bearing event on the same node
         (per-node non-overlap), a blind window no later than the next blind
-        window (the control plane is a single global resource), and every
-        window ends by the campaign horizon."""
-        k = len(times)
+        window (the control plane is a single global resource), a switch
+        window no later than the next event on the same switch, a dns flap
+        no later than the next flap of the same peer, and every window ends
+        by the campaign horizon."""
         deg_idx = np.nonzero(is_deg)[0]
         for a, j in enumerate(deg_idx):
             for j2 in deg_idx[a + 1:]:
@@ -240,6 +319,19 @@ class FailureInjector:
         blind_idx = np.nonzero(is_blind)[0]
         for a, b in zip(blind_idx, blind_idx[1:]):
             windows[a] = min(windows[a], times[b] - times[a])
+        if is_switch is not None:
+            sw_idx = np.nonzero(is_switch)[0]
+            for a, j in enumerate(sw_idx):
+                for j2 in sw_idx[a + 1:]:
+                    if switch_ids[j2] == switch_ids[j]:
+                        windows[j] = min(windows[j], times[j2] - times[j])
+                        break
+            dns_idx = np.nonzero(is_dns)[0]
+            for a, j in enumerate(dns_idx):
+                for j2 in dns_idx[a + 1:]:
+                    if nodes[j2] == nodes[j]:
+                        windows[j] = min(windows[j], times[j2] - times[j])
+                        break
         return np.where(windows > 0,
                         np.minimum(windows, duration_h - times), 0.0)
 
@@ -263,14 +355,21 @@ class FailureInjector:
         probs.append(P_RESOURCE_EXHAUST * w.get("resource_exhaust", 0.0))
         kinds.append(("ctrl_blind", None))
         probs.append(P_CTRL_BLIND * w.get("ctrl_blind", 0.0))
+        # correlated band: zero-weight by default, same zero-mass-append
+        # guarantee as the infra band above
+        kinds.append(("switch_degrade", None))
+        probs.append(P_SWITCH_DEGRADE * w.get("switch_degrade", 0.0))
+        kinds.append(("dns_flap", None))
+        probs.append(P_DNS_FLAP * w.get("dns_flap", 0.0))
         probs = np.asarray(probs)
         return kinds, probs / probs.sum()
 
 
 # kind codes used by the stacked schedule (FailureBatch.kind); codes >= 3
-# are the degrade-don't-kill infra band
+# are the degrade-don't-kill infra band, codes >= 6 its correlated subset
 KIND_NAMES = ("xid", "unreachable", "fail_slow",
-              "net_degrade", "resource_exhaust", "ctrl_blind")
+              "net_degrade", "resource_exhaust", "ctrl_blind",
+              "switch_degrade", "dns_flap")
 _KIND_CODES = {name: i for i, name in enumerate(KIND_NAMES)}
 ONSET_NAMES = ("", "gradual", "spike")
 
@@ -296,6 +395,9 @@ class FailureBatch:
     windows: np.ndarray            # (K,) degradation/outage window hours
     onset: np.ndarray              # (K,) int8 — index into ONSET_NAMES
     escalate: np.ndarray           # (K,) bool — window ends in a crash
+    switch: np.ndarray             # (K,) int64 — degraded switch, -1 = none
+    members: List[tuple]           # (K,) blast-radius node tuples
+    peers: List[tuple]             # (K,) dns_flap unreachable peer tuples
     _cache: Dict[int, List[FailureEvent]] = field(default_factory=dict,
                                                   repr=False)
 
@@ -320,7 +422,10 @@ class FailureBatch:
                              slow_factor=float(self.slows[j]),
                              window_h=float(self.windows[j]),
                              onset=ONSET_NAMES[self.onset[j]],
-                             escalate=bool(self.escalate[j]))
+                             escalate=bool(self.escalate[j]),
+                             switch=int(self.switch[j]),
+                             members=self.members[j],
+                             peers=self.peers[j])
                 for j in range(a, b)]
         return self._cache[i]
 
@@ -348,23 +453,76 @@ def onset_progress(ts, t0: float, t1: float, onset: str) -> np.ndarray:
 
 
 def degradation_windows(events: Sequence[FailureEvent]):
-    """(node, t0, t1, severity, kind, onset) per degrade-band event."""
-    return [(ev.node, ev.time_h, ev.time_h + ev.window_h, ev.slow_factor,
+    """(node, t0, t1, severity, kind, onset) per degrade-band event, plus
+    the per-member expansion of every correlated blast radius — so both
+    engines' degraded-hours ledgers charge fabric faults to every affected
+    node through the one helper they already share.
+
+    ``events`` may be empty (or a zero-event seed's slice); the result is
+    then simply ``[]`` — callers never need to special-case it."""
+    wins = [(ev.node, ev.time_h, ev.time_h + ev.window_h, ev.slow_factor,
              ev.kind, ev.onset)
             for ev in events if ev.kind in DEGRADE_KINDS]
+    wins.extend(blast_radius_windows(events))
+    return wins
+
+
+def blast_radius_windows(events: Sequence[FailureEvent]):
+    """Per-node expansion of correlated (fabric) events: one entry
+    ``(node, t0, t1, severity, kind, onset)`` per affected node per event,
+    truncated deterministically so no node carries two overlapping
+    correlated entries.  Empty input round-trips to ``[]``."""
+    out = []
+    last_end: Dict[int, float] = {}
+    for ev in events:
+        if ev.kind not in CORRELATED_KINDS or ev.window_h <= 0.0:
+            continue
+        t0, t1 = ev.time_h, ev.time_h + ev.window_h
+        for node in sorted(set(ev.members) | set(ev.peers)):
+            a0 = max(t0, last_end.get(node, 0.0))
+            if a0 >= t1:
+                continue
+            out.append((node, a0, t1, ev.slow_factor, ev.kind, ev.onset))
+            last_end[node] = t1
+    return out
+
+
+def flap_pairs(ev: FailureEvent) -> frozenset:
+    """Symmetric pairwise connectivity mask for a dns_flap event: the
+    (a, b) node pairs that cannot reach each other during the window.
+    A flap is a *link* property, so the mask always contains both
+    directions; non-flap events yield the empty mask."""
+    pairs = set()
+    for a in ev.members:
+        for b in ev.peers:
+            if a != b:
+                pairs.add((a, b))
+                pairs.add((b, a))
+    return frozenset(pairs)
 
 
 def escalation_events(events: Sequence[FailureEvent]):
-    """(crash_time_h, node), time-sorted, for escalating pressure windows."""
+    """(crash_time_h, node), time-sorted, for escalating pressure windows.
+    Empty input round-trips to ``[]``."""
     return sorted((ev.time_h + ev.window_h, ev.node)
                   for ev in events
                   if ev.kind == "resource_exhaust" and ev.escalate)
 
 
 def blind_windows(events: Sequence[FailureEvent]):
-    """(t0, t1) per control-plane outage, in schedule order."""
+    """(t0, t1) per control-plane outage, in schedule order.  Empty input
+    round-trips to ``[]``."""
     return [(ev.time_h, ev.time_h + ev.window_h)
             for ev in events if ev.kind == "ctrl_blind"]
+
+
+def has_correlated_band(kind_weights: Optional[Dict[str, float]]) -> bool:
+    """True when the weight dict gives any correlated kind positive mass —
+    the wavefront eligibility check (kernels/wavefront) and the engines'
+    fast paths key off this."""
+    if not kind_weights:
+        return False
+    return any(kind_weights.get(k, 0.0) > 0.0 for k in CORRELATED_KINDS)
 
 
 def degraded_overlap_h(windows, t0: float, t1: float, nodes) -> float:

@@ -39,7 +39,8 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.cluster import CampaignConfig, ClusterSim
-from repro.core.failures import FailureInjector, degraded_overlap_h
+from repro.core.failures import (FailureInjector, degraded_overlap_h,
+                                 has_correlated_band)
 from repro.kernels.common import (WAVEFRONT_MIN_SEEDS, next_pow2, on_tpu,
                                   validate_backend)
 from repro.kernels.wavefront.ref import (F_ADVANCE, F_ALLOCFAIL,
@@ -60,9 +61,14 @@ _MAX_CAP_RETRIES = 6
 
 
 def compiled_eligible(cfg: CampaignConfig) -> bool:
-    """True when the campaign is in the compiled wavefront's scope."""
+    """True when the campaign is in the compiled wavefront's scope.
+
+    The correlated fault band (switch_degrade / dns_flap) is host-only:
+    its variable-size blast-radius sets don't fit the fixed-lane tape
+    layout, so configs carrying those kinds route to the numpy engines."""
     return (cfg.engine == "event" and not cfg.telemetry
-            and cfg.control is None)
+            and cfg.control is None
+            and not has_correlated_band(cfg.kind_weights))
 
 
 def resolve_wavefront_backend(backend: str, cfg: CampaignConfig,
@@ -81,8 +87,9 @@ def resolve_wavefront_backend(backend: str, cfg: CampaignConfig,
     if backend != "numpy" and not compiled_eligible(cfg):
         raise ValueError(
             f"wavefront backend {backend!r} requires a control-free "
-            "campaign (telemetry off, control None); use backend='auto' "
-            "or 'numpy' for telemetry/control configs")
+            "campaign (telemetry off, control None, no correlated fault "
+            "band); use backend='auto' or 'numpy' for telemetry/control/"
+            "correlated configs")
     return backend
 
 
@@ -303,6 +310,10 @@ def _lane_findings(tables: LaneTables, host, R: _Replay,
         "f4_manual_downtime_h": float(np.median(mans)) if mans else None,
         "infra_n_events": float(tables.infra_n[lane]),
         "infra_degraded_h": deg_h,
+        # eligibility excludes the correlated band, so these lanes carry
+        # no switch_degrade / dns_flap events by construction
+        "corr_n_events": 0.0,
+        "corr_top_switch_share": 0.0,
     }
 
 
@@ -327,11 +338,12 @@ def run_findings_grid(configs: Sequence[CampaignConfig],
         if not compiled_eligible(rcfg):
             raise ValueError(
                 "run_findings_grid covers control-free campaigns only "
-                "(telemetry off, control None)")
+                "(telemetry off, control None, no correlated fault band)")
         injector = FailureInjector(
             n_nodes=rcfg.n_nodes, mtbf_h=rcfg.mtbf_h,
             hot_fraction=rcfg.hot_fraction, hot_weight=rcfg.hot_weight,
-            kind_weights=rcfg.kind_weights, seed=rcfg.seed)
+            kind_weights=rcfg.kind_weights,
+            topology_fanout=rcfg.topology_fanout, seed=rcfg.seed)
         fails = injector.sample_batch(rcfg.duration_h, seeds)
         resolved.append((rcfg, fails))
 

@@ -227,6 +227,49 @@ class LogEmitter:
             self._add(t + w + 1e-3, node,
                       "INFO mm: memory pressure cleared, reclaim idle")
 
+    def _reg_switch_degrade(self, ev) -> None:
+        rng = self.rng
+        t = float(ev.time_h)
+        w = max(float(getattr(ev, "window_h", 0.0)), 0.1)
+        members = [int(m) for m in getattr(ev, "members", ())]
+        sw = int(getattr(ev, "switch", -1))
+        # the correlated shape a per-node program cannot produce: every
+        # member of the rack logs transport symptoms inside the same
+        # stall cluster, because the fault lives in the shared leaf
+        for tt in self._spread(t, w, rate_h=8.0):
+            tt = float(tt)
+            for i, node in enumerate(members):
+                self._add(tt + 1e-4 * i, node,
+                          f"ERROR net: uplink errors via leaf switch, tcp "
+                          f"retransmit storm on bond0, "
+                          f"{int(rng.integers(50, 900))} segments resent")
+        self._add(t + 1e-3, -1,
+                  f"WARN fabric: leaf switch {sw} reporting degraded "
+                  f"links on {len(members)} ports")
+        self._add(t + w + 1e-3, -1,
+                  f"INFO fabric: leaf switch {sw} link quality restored")
+
+    def _reg_dns_flap(self, ev) -> None:
+        rng = self.rng
+        t = float(ev.time_h)
+        w = max(float(getattr(ev, "window_h", 0.0)), 0.05)
+        peers = [int(p) for p in getattr(ev, "peers", ())]
+        members = [int(m) for m in getattr(ev, "members", ())]
+        if not peers:
+            return
+        peer = peers[0]
+        # partial-gang connectivity loss: only the flapped members speak,
+        # and they all name the same unreachable peer (the Mycroft
+        # setting again — the analyzer indicts the peer from references)
+        for i, node in enumerate(members):
+            self._add(t + 1e-4 * (i + 1), node,
+                      f"ERROR rpc: name resolution for node-{peer} "
+                      f"failed, transport reset after "
+                      f"{int(rng.integers(1, 30))} retries")
+        self._add(t + w + 1e-3, -1,
+                  f"INFO dns: record for node-{peer} restored, "
+                  f"flap cleared")
+
     def _reg_ctrl_blind(self, ev) -> None:
         t = float(ev.time_h)
         w = max(float(getattr(ev, "window_h", 0.0)), 0.0)

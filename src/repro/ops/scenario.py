@@ -98,6 +98,13 @@ class Scenario:
     # gang-wide symptoms to a root-cause node, fused into the same alarm
     # stream.  Requires control_plane; off by default (bit-identity).
     log_channel: bool = False
+    # blast-radius-aware recovery (correlated fault band): attribute
+    # gang-wide alarm bursts to the shared leaf switch, suppress member
+    # drains while the switch is indicted, and re-place retries away from
+    # the degraded rack.  Requires control_plane; off by default.
+    blast_radius_aware: bool = False
+    topology_fanout: int = 8              # nodes per leaf switch (the
+                                          #   switch_degrade blast radius)
     # streaming-detector pass-1 implementation: "numpy" (reference /
     # parity oracle) | "xla" (fused jitted XLA) | "pallas" (TPU kernel).
     # The compiled backends produce the identical alarm set, so campaign
@@ -124,6 +131,10 @@ class Scenario:
             raise ValueError(
                 "log_channel requires control_plane=True (the log "
                 "analyzer's verdicts fuse into the control loop)")
+        if self.blast_radius_aware and not self.control_plane:
+            raise ValueError(
+                "blast_radius_aware requires control_plane=True (switch "
+                "indictment lives in the control loop)")
 
     # -- resolution ---------------------------------------------------------
 
@@ -186,6 +197,8 @@ class Scenario:
             drain_confirm_alarms=self.control_drain_confirm_alarms,
             alarm_memory_h=self.control_alarm_memory_h,
             log_channel=self.log_channel,
+            blast_radius_aware=self.blast_radius_aware,
+            topology_fanout=self.topology_fanout,
             detector_backend=self.detector_backend)
 
     def to_campaign_config(self, seed: int = 0) -> CampaignConfig:
@@ -204,6 +217,7 @@ class Scenario:
             hot_weight=self.hot_weight,
             kind_weights=dict(self.kind_weights)
             if self.kind_weights else None,
+            topology_fanout=self.topology_fanout,
             telemetry=self.telemetry,
             telemetry_pad_metrics=self.telemetry_pad_metrics,
             seed=seed,
@@ -410,6 +424,37 @@ PRESETS: Dict[str, Scenario] = {s.name: s for s in [
         control_plane=True,
         control_drain=True,
         log_channel=True),
+    Scenario(
+        name="switch-blast",
+        description="Correlated fault band, switch-dominated: one leaf "
+                    "switch degrades and every node behind it co-degrades "
+                    "for the same window (the blast radius the per-node "
+                    "fault model cannot express).  Control-free: the "
+                    "reactive baseline eats the full gang-wide slowdown.",
+        kind_weights={"switch_degrade": 8.0}),
+    Scenario(
+        name="dns-flaps",
+        description="Correlated fault band, flap-dominated: short partial-"
+                    "gang connectivity windows where a sampled peer becomes "
+                    "unreachable from a small member set (pairwise mask, "
+                    "not node-down) — rpc name-resolution noise that looks "
+                    "like a sick node but is not.  Control-free baseline.",
+        kind_weights={"dns_flap": 8.0}),
+    Scenario(
+        name="correlated-recovery",
+        description="Blast-radius-aware recovery over the full correlated "
+                    "band: net-class alarm bursts across one switch's "
+                    "members indict the shared switch (Mycroft-style cross-"
+                    "node correlation, log lines fused in), member drains "
+                    "are suppressed while the switch is indicted, and retry "
+                    "placement avoids the degraded rack.  48-node gang in "
+                    "the 63-node pool so a full rack can be placed around.",
+        job_nodes=48,
+        kind_weights={"switch_degrade": 6.0, "dns_flap": 4.0},
+        control_plane=True,
+        control_drain=True,
+        log_channel=True,
+        blast_radius_aware=True),
 ]}
 
 

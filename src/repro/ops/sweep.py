@@ -31,7 +31,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.cluster import ClusterSim
-from repro.core.failures import INFRA_KINDS
+from repro.core.failures import CORRELATED_KINDS, INFRA_KINDS
 from repro.core.retry import chain_stats
 from repro.ops.scenario import Scenario, get_scenario
 
@@ -54,6 +54,15 @@ PAPER_REFERENCE = {
 # ---------------------------------------------------------------------------
 # per-campaign worker (module-level: must pickle for ProcessPoolExecutor)
 # ---------------------------------------------------------------------------
+
+def _top_switch_share(failures) -> float:
+    """Share of switch_degrade events landing on the busiest switch (same
+    bincount arithmetic as the batched engine's `_findings`)."""
+    sw = [f.switch for f in failures if f.kind == "switch_degrade"]
+    if not sw:
+        return 0.0
+    return float(np.bincount(np.asarray(sw)).max() / len(sw))
+
 
 def compute_findings(res) -> Dict[str, Optional[float]]:
     """F2-F4 metrics (plus campaign health) from one CampaignResult."""
@@ -86,6 +95,12 @@ def compute_findings(res) -> Dict[str, Optional[float]]:
         "infra_n_events": float(sum(1 for f in res.failures
                                     if f.kind in INFRA_KINDS)),
         "infra_degraded_h": float(np.sum(res.degraded_hours)),
+        # correlated fault band: event count and switch concentration (the
+        # share of switch_degrade events on the busiest leaf switch — F3 at
+        # rack granularity; 0.0 without the band)
+        "corr_n_events": float(sum(1 for f in res.failures
+                                   if f.kind in CORRELATED_KINDS)),
+        "corr_top_switch_share": _top_switch_share(res.failures),
     }
     if res.control is not None:
         ctl = res.control.summarize(res.failures, res.duration_h)
@@ -254,6 +269,7 @@ class SweepResult:
         ("f4_auto_downtime_h", "auto dt h", lambda v: f"{v:.1f}"),
         ("f4_manual_downtime_h", "manual dt h", lambda v: f"{v:.1f}"),
         ("infra_degraded_h", "deg h", lambda v: f"{v:.1f}"),
+        ("corr_top_switch_share", "corr sw %", lambda v: f"{v*100:.0f}"),
     ]
 
     def comparison_rows(self) -> List[List[str]]:
@@ -337,8 +353,10 @@ class SweepResult:
         ("f4_auto_downtime_h", "auto dt h", 1.0, "{:.2f}"),
         ("f4_manual_downtime_h", "manual dt h", 1.0, "{:.2f}"),
         ("infra_degraded_h", "deg h", 1.0, "{:.2f}"),
+        ("corr_top_switch_share", "corr sw %", 100.0, "{:.0f}"),
         ("ctrl_ttd_h", "TTD h", 1.0, "{:.2f}"),
         ("ctrl_false_drains", "false drains", 1.0, "{:.1f}"),
+        ("ctrl_switch_attr_rate", "sw attr %", 100.0, "{:.0f}"),
     ]
 
     # distributional columns render from this many seeds up (below that,
@@ -426,8 +444,8 @@ class SweepResult:
     _CONTROL_ONLY_FIELDS = frozenset({
         "name", "description", "control_plane", "control_urgent_checkpoint",
         "control_drain", "control_drain_confirm_alarms",
-        "control_alarm_memory_h", "log_channel", "telemetry",
-        "telemetry_store", "telemetry_pad_metrics",
+        "control_alarm_memory_h", "log_channel", "blast_radius_aware",
+        "telemetry", "telemetry_store", "telemetry_pad_metrics",
     })
 
     def _reactive_twin(self, ctl_sc: Scenario) -> Optional[Scenario]:

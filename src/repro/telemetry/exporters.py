@@ -171,6 +171,18 @@ class ExporterSuite:
         """Register a degrade-band window ([t0, t1), net/resource kind)."""
         self.degradations.append((node, t0_h, t1_h, severity, kind, onset))
 
+    def begin_link_degradation(self, nodes, t0_h: float, t1_h: float,
+                               severity: float, onset: str = "spike"):
+        """Correlated fault band: one fabric event (switch degradation or
+        a dns flap's affected links) degrades *every* listed node for the
+        same window.  Registers the shared window per node through the
+        net-degrade overlay — deterministic and RNG-free, so gang members
+        co-degrade with the exact correlated timing the detector's
+        cross-node pass keys on."""
+        for node in nodes:
+            self.begin_degradation(int(node), t0_h, t1_h, severity,
+                                   "net_degrade", onset)
+
     def begin_outage(self, t0_h: float, t1_h: float):
         """Register a control-plane blind window (scheduler outage)."""
         self.outages.append((t0_h, t1_h))

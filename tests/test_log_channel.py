@@ -143,7 +143,7 @@ def test_log_channel_off_never_constructs_subsystem(monkeypatch):
 
 def test_only_log_fusion_presets_enable_the_gate():
     on = {name for name, sc in PRESETS.items() if sc.log_channel}
-    assert on == {"log-fusion"}
+    assert on == {"log-fusion", "correlated-recovery"}
     assert PRESETS["log-fusion-off"].control_plane
     # the twin differs from log-fusion only on the gate (and naming)
     a = PRESETS["log-fusion-off"].to_dict()
