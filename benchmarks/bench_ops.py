@@ -952,6 +952,130 @@ def bench_fault_topology() -> list:
              f"(ledger + findings, sampled seeds)")]
 
 
+# ---------------------------------------------------------------------------
+# sweep-as-a-service: coalesced what-if queries
+# ---------------------------------------------------------------------------
+
+def bench_sweep_service() -> list:
+    """The what-if service under concurrent load: 16 client threads
+    hammering a 4-scenario pool, coalesced dispatch (window batching +
+    in-flight dedup, cache OFF so every answer is engine-made) against
+    the naive one-pass-per-request service.  Gates:
+
+    * coalesced sustained QPS >= 3x naive at 16 concurrent clients,
+      with every coalesced answer bitwise equal to a per-request serial
+      engine pass on the same seeds (coalescing is dispatch
+      amortization, not approximation);
+    * cache-hit p99 < 5 ms (the `sweep_service_cache_hit` row sits
+      below the ratio gate's --min-us floor by construction; its
+      latency gate lives here as an assertion).
+    """
+    import threading
+    import time as _time
+
+    from repro.core.batch import BatchedCampaignEngine
+    from repro.ops import findings_distribution, get_scenario
+    from repro.serve import ServiceConfig, WhatIfService
+
+    n_threads, per_thread, n_seeds = 16, 2 if FAST else 4, 16
+    pool = [get_scenario("paper-faithful").replace(
+        duration_days=3.0, checkpoint_interval_h=h)
+        for h in (1.5, 2.23, 3.0, 4.0)]
+
+    def hammer(svc) -> tuple:
+        """16 threads x per_thread queries round-robin over the pool;
+        returns (wall_s, answers)."""
+        answers = [[None] * per_thread for _ in range(n_threads)]
+        barrier = threading.Barrier(n_threads + 1)
+
+        def worker(i):
+            barrier.wait()
+            for j in range(per_thread):
+                # two distinct keys per wave, all four across the run:
+                # mixed duplicate/distinct load with 8 duplicates/key
+                sc = pool[(i % 2 + 2 * j) % len(pool)]
+                answers[i][j] = (sc, svc.query(sc, n_seeds))
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        barrier.wait()
+        t0 = _time.perf_counter()
+        for t in threads:
+            t.join()
+        return _time.perf_counter() - t0, answers
+
+    # both arms engine-only: cache off isolates the dispatch layer
+    naive = WhatIfService(ServiceConfig(
+        coalesce=False, dedupe_inflight=False, cache_capacity=0,
+        wavefront_backend="numpy"))
+    coal = WhatIfService(ServiceConfig(
+        window_s=0.01, cache_capacity=0, wavefront_backend="numpy"))
+    try:
+        coal.query(pool[0], n_seeds)          # warm (allocator, imports)
+        wall_naive, _ = hammer(naive)
+        wall_coal, answers = hammer(coal)
+    finally:
+        naive.close()
+        coal.close()
+
+    n_queries = n_threads * per_thread
+    qps_naive = n_queries / wall_naive
+    qps_coal = n_queries / wall_coal
+
+    # parity: every coalesced answer == a per-request serial pass
+    refs = {}
+    for sc in pool:
+        eng = BatchedCampaignEngine(sc.to_campaign_config(0),
+                                    wavefront_backend="numpy")
+        refs[sc.canonical_key()] = findings_distribution(
+            eng.run_findings(list(range(n_seeds))))
+    for row in answers:
+        for sc, ans in row:
+            if ans.distribution != refs[sc.canonical_key()]:
+                raise AssertionError(
+                    f"coalesced answer for {sc.checkpoint_interval_h}h "
+                    "diverged from the per-request serial pass")
+
+    speedup = qps_coal / qps_naive
+    if speedup < 3.0:
+        raise AssertionError(
+            f"coalesced dispatch QPS advantage collapsed to "
+            f"x{speedup:.1f} (coalesced {qps_coal:.0f} qps vs naive "
+            f"{qps_naive:.0f} qps at {n_threads} clients; >=3x gated)")
+
+    # cache-hit latency: primed LRU, repeated equivalent queries
+    svc = WhatIfService(ServiceConfig(coalesce=False,
+                                      wavefront_backend="numpy"))
+    try:
+        svc.query(pool[0], n_seeds)
+        lat = []
+        for _ in range(50 if FAST else 200):
+            t0 = _time.perf_counter()
+            hit = svc.query(pool[0], n_seeds)
+            lat.append(_time.perf_counter() - t0)
+            assert hit.source == "cache"
+    finally:
+        svc.close()
+    p99_us = float(np.percentile(lat, 99) * 1e6)
+    p50_us = float(np.percentile(lat, 50) * 1e6)
+    if p99_us >= 5000.0:
+        raise AssertionError(
+            f"cache-hit p99 {p99_us/1e3:.2f} ms breached the 5 ms budget")
+
+    return [
+        ("sweep_service_coalesced", wall_coal * 1e6 / n_queries,
+         f"{n_queries} queries/{n_threads} threads over 4 scenarios x "
+         f"{n_seeds} seeds (3d): coalesced {qps_coal:.0f} qps vs naive "
+         f"{qps_naive:.0f} qps = x{speedup:.1f} (>=3x gated) "
+         "parity=exact vs per-request serial", None, n_seeds),
+        ("sweep_service_cache_hit", p99_us,
+         f"LRU hit latency p50={p50_us:.0f}us p99={p99_us:.0f}us "
+         f"over {len(lat)} hits (<5ms p99 gated)", None, None),
+    ]
+
+
 def all_benches():
     return [bench_taxonomy, bench_storage_fabric, bench_youngdaly,
             bench_rpc, bench_ckpt_path, bench_io_sharding,
@@ -959,4 +1083,4 @@ def all_benches():
             bench_precursor, bench_control_plane, bench_cluster_engine,
             bench_mc_batch, bench_mc_wavefront, bench_detector_backend,
             bench_scenario_sweep, bench_fault_taxonomy,
-            bench_fault_topology]
+            bench_fault_topology, bench_sweep_service]

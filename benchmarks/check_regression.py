@@ -14,7 +14,8 @@ regenerate the baseline to start tracking them:
         --only cluster_engine --only storage_fabric \
         --only control_plane --only mc_batch --only mc_wavefront \
         --only detector_backend --only fault_taxonomy \
-        --only fault_topology --json benchmarks/baselines/ci_baseline.json
+        --only fault_topology --only sweep_service \
+        --json benchmarks/baselines/ci_baseline.json
 
 ``--require GROUP`` (repeatable) declares a gated group: at least one row
 whose name contains GROUP must exist in BOTH files, otherwise the gate

@@ -5,7 +5,8 @@
 ``--only`` is repeatable; a bench runs when ANY given substring matches its
 name (CI: ``--only cluster_engine --only storage_fabric --only
 control_plane --only mc_batch --only mc_wavefront --only
-detector_backend --only fault_taxonomy --only fault_topology``).  Prints
+detector_backend --only fault_taxonomy --only fault_topology --only
+sweep_service``).  Prints
 ``name,us_per_call,derived`` CSV; ``--json`` additionally writes the rows
 as a JSON document (the CI artifact, which ``benchmarks.check_regression``
 gates against the committed baseline) stamped with the git SHA, an

@@ -59,7 +59,7 @@ from repro.telemetry.exporters import (ExporterSuite, N_PAD_METRICS,
                                        NodeStateBatch)
 from repro.telemetry.registry import TimeSeriesStore
 
-__all__ = ["BatchedCampaignEngine"]
+__all__ = ["BatchedCampaignEngine", "run_findings_stacked"]
 
 # hot-loop lookup: XID -> is-hardware (mirrors FailureEvent.is_hardware)
 _XID_HW = {x: meta.hardware for x, meta in XID_TABLE.items()}
@@ -1188,3 +1188,71 @@ class BatchedCampaignEngine:
             drains = B.reason_counts[i].get("predictive drain")
             out["ctrl_drain_excl_events"] = float(drains) if drains else 0.0
         return out
+
+# ---------------------------------------------------------------------------
+# heterogeneous stacked dispatch (the what-if service's engine entry)
+# ---------------------------------------------------------------------------
+
+def run_findings_stacked(configs: Sequence[CampaignConfig],
+                         seeds: Sequence[int], *,
+                         wavefront_backend: str = "auto"
+                         ) -> List[Dict[int, List[dict]]]:
+    """Findings for every (config, seed) lane of a heterogeneous batch.
+
+    The engine's lane axis is homogeneous per pass — every lane shares
+    one ``CampaignConfig`` (numpy wavefront) or one node count
+    (compiled grid, where gang masks share the node axis).  Callers
+    holding a *mixed* bag of configs (the request coalescer) therefore
+    get the documented grouping discipline instead of a free-form lane
+    stack:
+
+    * compiled-eligible configs (control-free, telemetry off, no
+      correlated band) are grouped **by node count** and each group runs
+      as ONE `run_findings_grid` device pass when the combined lane
+      count clears the compiled floor;
+    * every other config runs its own `BatchedCampaignEngine` pass
+      (S seeds, one stacked-numpy wavefront).
+
+    Per-seed findings are bitwise identical to running each config alone
+    — lanes never interact (the parity contract both engines carry), so
+    stacking is free coalescing, not approximation.  Returns
+    ``out[i][seed]`` wrapped as per-config ``{seed: findings}`` dicts
+    aligned with ``configs``; the number of underlying engine passes is
+    ``len(configs)`` at most (fewer when grid groups form).
+    """
+    if wavefront_backend not in ("auto", "numpy", "xla", "pallas"):
+        raise ValueError(
+            f"unknown wavefront backend {wavefront_backend!r}")
+    seeds = list(seeds)
+    covered: Dict[int, List[dict]] = {}
+    if wavefront_backend != "numpy":
+        try:
+            from repro.kernels.common import WAVEFRONT_MIN_SEEDS
+            from repro.kernels.wavefront import compiled_eligible
+            from repro.kernels.wavefront.ops import run_findings_grid
+        except ImportError:              # no jax: auto degrades to numpy
+            if wavefront_backend != "auto":
+                raise
+        else:
+            groups: Dict[int, List[int]] = {}
+            for i, cfg in enumerate(configs):
+                if compiled_eligible(ClusterSim(cfg).cfg):
+                    groups.setdefault(cfg.n_nodes, []).append(i)
+            dev = "xla" if wavefront_backend == "auto" \
+                else wavefront_backend
+            for idxs in groups.values():
+                if wavefront_backend == "auto" \
+                        and len(idxs) * len(seeds) < WAVEFRONT_MIN_SEEDS:
+                    continue             # too few lanes to beat numpy
+                per_cfg = run_findings_grid([configs[i] for i in idxs],
+                                            seeds, backend=dev)
+                for j, i in enumerate(idxs):
+                    covered[i] = per_cfg[j]
+    out: List[Dict[int, List[dict]]] = []
+    for i, cfg in enumerate(configs):
+        findings = covered.get(i)
+        if findings is None:
+            findings = BatchedCampaignEngine(
+                cfg, wavefront_backend="numpy").run_findings(seeds)
+        out.append(dict(zip(seeds, findings)))
+    return out

@@ -7,10 +7,12 @@ aggregates the paper's F1-F4 findings into comparison tables.
 """
 from repro.ops.scenario import (PRESETS, Scenario, get_scenario,
                                 list_scenarios)
-from repro.ops.sweep import (SweepOutcome, SweepResult, SweepRunner,
+from repro.ops.sweep import (MIN_DIST_SEEDS, SweepOutcome, SweepResult,
+                             SweepRunner, findings_distribution,
                              run_campaign)
 
 __all__ = [
     "Scenario", "PRESETS", "get_scenario", "list_scenarios",
     "SweepRunner", "SweepResult", "SweepOutcome", "run_campaign",
+    "MIN_DIST_SEEDS", "findings_distribution",
 ]

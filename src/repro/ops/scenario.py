@@ -15,6 +15,8 @@ can ship specs across process boundaries (and users can keep them in JSON).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -248,6 +250,58 @@ class Scenario:
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    # labels, not semantics: two specs differing only here run the exact
+    # same campaign, so the canonical key must treat them as equal
+    _LABEL_FIELDS = ("name", "description")
+
+    def canonical_dict(self) -> dict:
+        """The semantics of this spec in canonical form.
+
+        Normalization rules (what makes two specs "the same campaign"):
+
+        * ``name``/``description`` are dropped — they label the spec, the
+          simulation never reads them (preset-vs-explicit equivalence:
+          a preset and a hand-built Scenario with identical fields get
+          identical keys);
+        * numeric values are canonicalized to ``float`` (``73`` and
+          ``73.0`` resolve to the same campaign; bools stay bools);
+        * ``kind_weights`` drops identity tilts (``1.0`` multiplies a
+          category weight by one) and collapses empty/None to ``None``;
+        * ``overrides`` collapses empty to ``{}``; nested dict key order
+          never matters (ordering-insensitive by sorted-key dumping).
+        """
+        def norm(v):
+            if isinstance(v, bool) or v is None or isinstance(v, str):
+                return v
+            if isinstance(v, (int, float)):
+                return float(v)
+            if isinstance(v, dict):
+                return {k: norm(x) for k, x in sorted(v.items())}
+            raise TypeError(
+                f"unserializable scenario field value {v!r}")
+        d = {k: norm(v) for k, v in self.to_dict().items()
+             if k not in self._LABEL_FIELDS}
+        kw = {k: v for k, v in (d.get("kind_weights") or {}).items()
+              if v != 1.0}
+        d["kind_weights"] = kw or None
+        d["overrides"] = d.get("overrides") or {}
+        return d
+
+    def canonical_key(self) -> str:
+        """Stable cache key for this spec's *semantics*.
+
+        Equal for any two specs that resolve to the same campaign:
+        dict-order changes, ``to_dict``/``from_dict`` round-trips, preset
+        vs explicit construction, int-vs-float spelling and identity
+        kind-weight tilts all collapse to one key (see
+        :meth:`canonical_dict`).  The key is the sha256 of the sorted
+        canonical JSON, so it is safe as a bounded-length LRU key and
+        across processes.
+        """
+        payload = json.dumps(self.canonical_dict(), sort_keys=True,
+                             separators=(",", ":"))
+        return hashlib.sha256(payload.encode()).hexdigest()
 
     @classmethod
     def from_dict(cls, d: dict) -> "Scenario":

@@ -35,6 +35,12 @@ from repro.core.failures import CORRELATED_KINDS, INFRA_KINDS
 from repro.core.retry import chain_stats
 from repro.ops.scenario import Scenario, get_scenario
 
+# distributional statistics (median/IQR/CI columns, paired goodput
+# deltas, what-if service answers) render from this many seeds up —
+# below it, quartiles of a handful of campaigns would be noise dressed
+# as rigor.  Shared by the report sections and `repro.serve`.
+MIN_DIST_SEEDS = 8
+
 # paper headline values, shown as the reference row of every report
 PAPER_REFERENCE = {
     "occupancy": 0.966,            # §3 training occupancy
@@ -186,6 +192,48 @@ def run_campaign(scenario_dict: dict, seed: int) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# distribution extraction (shared by the report and the what-if service)
+# ---------------------------------------------------------------------------
+
+def findings_distribution(per_seed: Sequence[Dict[str, Optional[float]]]
+                          ) -> Dict[str, dict]:
+    """metric -> distribution stats over one stack of per-seed findings.
+
+    Each entry carries ``n``, ``mean``, ``median``, ``q25``/``q75`` (the
+    IQR) and a normal-approximation 95% CI of the mean (``ci_lo``/
+    ``ci_hi``; degenerate at n=1).  ``None`` values (metric not
+    applicable for that seed) are skipped; non-numeric metrics are
+    dropped.  This is the single extraction both `SweepResult.
+    distribution()` (per scenario) and the what-if service (per stacked
+    engine pass) run, so a served answer and a report cell computed from
+    the same findings are the same numbers.
+    """
+    keys = sorted({k for f in per_seed for k in f})
+    stats: Dict[str, dict] = {}
+    for k in keys:
+        vals = [f[k] for f in per_seed if f.get(k) is not None]
+        if not vals or not all(
+                isinstance(v, (int, float)) for v in vals):
+            continue
+        a = np.asarray(vals, dtype=float)
+        mean = float(a.mean())
+        if len(a) > 1:
+            half = 1.96 * float(a.std(ddof=1)) / np.sqrt(len(a))
+        else:
+            half = 0.0
+        stats[k] = {
+            "n": len(a),
+            "mean": mean,
+            "median": float(np.median(a)),
+            "q25": float(np.percentile(a, 25)),
+            "q75": float(np.percentile(a, 75)),
+            "ci_lo": mean - half,
+            "ci_hi": mean + half,
+        }
+    return stats
+
+
+# ---------------------------------------------------------------------------
 # sweep runner
 # ---------------------------------------------------------------------------
 
@@ -217,39 +265,12 @@ class SweepResult:
         return out
 
     def distribution(self) -> Dict[str, Dict[str, dict]]:
-        """scenario -> metric -> distribution stats over seeds.
-
-        Each entry carries ``n``, ``mean``, ``median``, ``q25``/``q75``
-        (the IQR) and a normal-approximation 95% CI of the mean
-        (``ci_lo``/``ci_hi``; degenerate at n=1).  None values (metric not
-        applicable for that seed) are skipped, like `aggregate`.
-        """
+        """scenario -> metric -> distribution stats over seeds
+        (see :func:`findings_distribution` for the per-metric entries)."""
         out: Dict[str, Dict[str, dict]] = {}
         for sc in self.scenarios:
             per = [o.findings for o in self.outcomes if o.scenario == sc.name]
-            keys = sorted({k for f in per for k in f})
-            stats: Dict[str, dict] = {}
-            for k in keys:
-                vals = [f[k] for f in per if f.get(k) is not None]
-                if not vals or not all(
-                        isinstance(v, (int, float)) for v in vals):
-                    continue
-                a = np.asarray(vals, dtype=float)
-                mean = float(a.mean())
-                if len(a) > 1:
-                    half = 1.96 * float(a.std(ddof=1)) / np.sqrt(len(a))
-                else:
-                    half = 0.0
-                stats[k] = {
-                    "n": len(a),
-                    "mean": mean,
-                    "median": float(np.median(a)),
-                    "q25": float(np.percentile(a, 25)),
-                    "q75": float(np.percentile(a, 75)),
-                    "ci_lo": mean - half,
-                    "ci_hi": mean + half,
-                }
-            out[sc.name] = stats
+            out[sc.name] = findings_distribution(per)
         return out
 
     # -- rendering ----------------------------------------------------------
@@ -359,9 +380,9 @@ class SweepResult:
         ("ctrl_switch_attr_rate", "sw attr %", 100.0, "{:.0f}"),
     ]
 
-    # distributional columns render from this many seeds up (below that,
-    # quartiles of a handful of campaigns would be noise dressed as rigor)
-    MIN_SEEDS_FOR_DISTRIBUTION = 8
+    # distributional columns render from this many seeds up — the shared
+    # module-level cutoff (kept as a class attribute for back-compat)
+    MIN_SEEDS_FOR_DISTRIBUTION = MIN_DIST_SEEDS
 
     @staticmethod
     def _dist_cell(st: Optional[dict], scale: float, fmt: str) -> str:

@@ -1,0 +1,21 @@
+"""Sweep-as-a-service: coalesced what-if campaign queries.
+
+The served front door over the Monte Carlo campaign engines: concurrent
+"given this failure mix / node count / checkpoint cadence, what goodput
+should I expect?" queries waterfall through a canonical-key LRU cache,
+precomputed interpolated sweep surfaces, and window-coalesced stacked
+engine passes (`repro.serve.service` has the layer-by-layer story;
+`repro.serve.http` is the stdlib JSON transport; the model-inference
+serving driver remains `repro.launch.serve`).
+"""
+from repro.serve.cache import DistributionCache
+from repro.serve.coalesce import Coalescer
+from repro.serve.service import (ServiceConfig, WhatIfAnswer,
+                                 WhatIfService, scenario_from_request)
+from repro.serve.surface import SurfaceSpec, SweepSurface
+
+__all__ = [
+    "Coalescer", "DistributionCache", "ServiceConfig", "SurfaceSpec",
+    "SweepSurface", "WhatIfAnswer", "WhatIfService",
+    "scenario_from_request",
+]

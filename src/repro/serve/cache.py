@@ -1,0 +1,66 @@
+"""Bounded LRU of finished what-if distributions.
+
+Keys are canonical scenario keys (`Scenario.canonical_key()` plus the
+seed-count suffix the service appends), values are finished answer
+payloads — the cache never stores in-flight work (the service's
+in-flight table handles coalescing; the cache only ever sees completed
+distributions).  Thread-safe; every operation is O(1) under one lock,
+which is what makes cache hits a sub-millisecond answer path.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Optional
+
+__all__ = ["DistributionCache"]
+
+
+class DistributionCache:
+    """LRU mapping canonical query keys to finished answers.
+
+    ``capacity <= 0`` disables the cache (every ``get`` misses, ``put``
+    is a no-op) — the service uses that for the naive benchmark arms.
+    """
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = int(capacity)
+        self._data: "OrderedDict[str, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: str) -> Optional[Any]:
+        with self._lock:
+            if key not in self._data:
+                self.misses += 1
+                return None
+            self._data.move_to_end(key)
+            self.hits += 1
+            return self._data[key]
+
+    def put(self, key: str, value: Any) -> None:
+        if self.capacity <= 0:
+            return
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+            self._data[key] = value
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"size": len(self._data), "capacity": self.capacity,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}

@@ -1,0 +1,292 @@
+"""The what-if campaign query service core (transport-agnostic).
+
+One query = "given this scenario, what goodput / F-findings should I
+expect?", answered distributionally (median/IQR/95%-CI per metric over N
+Monte Carlo seeds).  Queries waterfall through three performance layers,
+cheapest first:
+
+1. **cache** — a bounded LRU of finished distributions keyed on the
+   canonical scenario key (`Scenario.canonical_key()`), so equivalent
+   specs (dict-order, preset-vs-explicit, int-vs-float spelling) hit
+   without touching the engine;
+2. **surface** — precomputed preset-grid distributions with multilinear
+   interpolation for near-miss queries (`repro.serve.surface`), an
+   *estimate* answer path that never claims engine parity;
+3. **engine** — live stacked passes.  Concurrent misses are coalesced:
+   an in-flight table attaches duplicate keys to the pass already
+   running, and the `Coalescer` window batches the distinct keys of a
+   burst into ONE `run_findings_stacked` call (grouped per config /
+   node count inside).  Per-request answers are bitwise identical to a
+   serial per-request pass — lanes never interact, so coalescing is
+   free dispatch amortization, not approximation.
+
+The core is plain objects + threads (unit-testable without sockets);
+`repro.serve.http` wraps it in a stdlib JSON API.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.batch import run_findings_stacked
+from repro.ops.scenario import Scenario, get_scenario
+from repro.ops.sweep import MIN_DIST_SEEDS, findings_distribution
+from repro.serve.cache import DistributionCache
+from repro.serve.coalesce import Coalescer
+from repro.serve.surface import SweepSurface
+
+__all__ = ["ServiceConfig", "WhatIfAnswer", "WhatIfService",
+           "scenario_from_request"]
+
+
+@dataclass
+class ServiceConfig:
+    """Knobs for the three layers (all independently disableable, which
+    is how the benchmark isolates each layer's contribution)."""
+
+    window_s: float = 0.02          # coalescing window (10-50 ms)
+    max_batch: int = 64             # early-dispatch threshold
+    cache_capacity: int = 256       # LRU entries; <=0 disables
+    default_seeds: int = 2 * MIN_DIST_SEEDS
+    max_seeds: int = 1024           # per-query ceiling (DoS guard)
+    coalesce: bool = True           # False: misses run in caller thread
+    dedupe_inflight: bool = True    # False: duplicates each run a pass
+    wavefront_backend: str = "auto"
+
+
+@dataclass
+class WhatIfAnswer:
+    """One served answer: the distribution plus provenance."""
+
+    scenario: str                   # query's scenario name (label only)
+    key: str                        # canonical cache key
+    n_seeds: int
+    source: str                     # "cache" | "surface" | "engine"
+    distribution: Dict[str, dict]   # metric -> n/mean/median/q25/q75/ci
+    distributional: bool            # n_seeds >= MIN_DIST_SEEDS
+    wall_s: float = 0.0
+    meta: Optional[dict] = None     # surface: coords + error estimate
+
+    def to_dict(self) -> dict:
+        return {"scenario": self.scenario, "key": self.key,
+                "n_seeds": self.n_seeds, "source": self.source,
+                "distributional": self.distributional,
+                "wall_s": self.wall_s, "meta": self.meta,
+                "distribution": self.distribution}
+
+
+def scenario_from_request(payload: dict) -> Scenario:
+    """Resolve a request payload to a `Scenario`.
+
+    ``{"preset": name}`` resolves a preset; ``{"scenario": {...}}``
+    builds from an (optionally partial) spec dict — missing fields fill
+    from the dataclass defaults, a missing ``name`` becomes "adhoc".
+    ``"overrides"`` (field -> value) applies on top of either; unknown
+    fields raise (a typo must not silently become the default campaign).
+    """
+    if not isinstance(payload, dict):
+        raise ValueError("request payload must be a JSON object")
+    has_preset = "preset" in payload
+    spec = payload.get("scenario")
+    if has_preset == (spec is not None):
+        raise ValueError(
+            "request needs exactly one of 'preset' or 'scenario'")
+    if has_preset:
+        sc = get_scenario(payload["preset"])
+    else:
+        if not isinstance(spec, dict):
+            raise ValueError("'scenario' must be a spec object")
+        spec = dict(spec)
+        spec.setdefault("name", "adhoc")
+        try:
+            sc = Scenario.from_dict(spec)
+        except TypeError as e:
+            raise ValueError(f"bad scenario spec: {e}") from None
+    overrides = payload.get("overrides") or {}
+    if overrides:
+        if not isinstance(overrides, dict):
+            raise ValueError("'overrides' must be an object")
+        try:
+            sc = sc.replace(**overrides)
+        except TypeError as e:
+            raise ValueError(f"bad overrides: {e}") from None
+    return sc
+
+
+class WhatIfService:
+    """Coalesced, cached, surface-accelerated what-if queries.
+
+    ``engine_fn`` defaults to `run_findings_stacked` and exists for
+    instrumentation (tests count engine passes through it); it must
+    preserve that function's contract.
+    """
+
+    def __init__(self, config: Optional[ServiceConfig] = None,
+                 surface: Optional[SweepSurface] = None,
+                 engine_fn: Optional[Callable] = None):
+        self.config = config or ServiceConfig()
+        self.surface = surface
+        self._engine_fn = engine_fn or (
+            lambda cfgs, seeds: run_findings_stacked(
+                cfgs, seeds,
+                wavefront_backend=self.config.wavefront_backend))
+        self.cache = DistributionCache(self.config.cache_capacity)
+        self._coalescer = Coalescer(
+            self._run_batch, window_s=self.config.window_s,
+            max_batch=self.config.max_batch) if self.config.coalesce \
+            else None
+        self._inflight: Dict[str, Future] = {}
+        self._inflight_lock = threading.Lock()
+        self.n_queries = 0
+        self.n_surface_hits = 0
+        self.n_engine_configs = 0
+        self.started = time.time()
+
+    # -- public API ---------------------------------------------------------
+
+    def query(self, scenario: Scenario,
+              n_seeds: Optional[int] = None) -> WhatIfAnswer:
+        return self.query_async(scenario, n_seeds).result()
+
+    def query_async(self, scenario: Scenario,
+                    n_seeds: Optional[int] = None) -> "Future[WhatIfAnswer]":
+        t0 = time.perf_counter()
+        self.n_queries += 1
+        n = self.config.default_seeds if n_seeds is None else int(n_seeds)
+        if not 1 <= n <= self.config.max_seeds:
+            raise ValueError(
+                f"n_seeds must be in [1, {self.config.max_seeds}], got {n}")
+        key = f"{scenario.canonical_key()}:s{n}"
+
+        done: "Future[WhatIfAnswer]" = Future()
+        cached = self.cache.get(key)
+        if cached is not None:
+            done.set_result(self._stamp(cached, "cache", t0))
+            return done
+        hit = self.surface.lookup(scenario) if self.surface else None
+        if hit is not None:
+            self.n_surface_hits += 1
+            ans = WhatIfAnswer(
+                scenario=scenario.name, key=key,
+                n_seeds=hit["distribution"].get(
+                    "goodput", {}).get("n", self.surface.spec.seeds),
+                source="surface", distribution=hit["distribution"],
+                distributional=self.surface.spec.seeds >= MIN_DIST_SEEDS,
+                wall_s=time.perf_counter() - t0,
+                meta={"coords": hit["coords"],
+                      "interp_err_goodput": hit["interp_err_goodput"]})
+            done.set_result(ans)
+            return done
+        return self._engine_path(scenario, n, key, t0)
+
+    def close(self) -> None:
+        if self._coalescer is not None:
+            self._coalescer.close()
+
+    def stats(self) -> dict:
+        out = {
+            "queries": self.n_queries,
+            "engine_configs": self.n_engine_configs,
+            "surface_hits": self.n_surface_hits,
+            "cache": self.cache.stats(),
+            "coalescer": self._coalescer.stats()
+            if self._coalescer else None,
+            "surface": self.surface.info() if self.surface else None,
+            "uptime_s": time.time() - self.started,
+            "config": {
+                "window_s": self.config.window_s,
+                "default_seeds": self.config.default_seeds,
+                "max_seeds": self.config.max_seeds,
+                "coalesce": self.config.coalesce,
+                "wavefront_backend": self.config.wavefront_backend,
+            },
+        }
+        return out
+
+    # -- engine path --------------------------------------------------------
+
+    def _engine_path(self, scenario: Scenario, n: int, key: str,
+                     t0: float) -> "Future[WhatIfAnswer]":
+        payload = (scenario, n)
+        if self.config.dedupe_inflight:
+            with self._inflight_lock:
+                running = self._inflight.get(key)
+                owner = running is None
+                if owner:
+                    # placeholder registered under the lock; the engine
+                    # work runs outside it so distinct keys never block
+                    # on each other's passes
+                    running = Future()
+                    self._inflight[key] = running
+                    running.add_done_callback(
+                        lambda _f, k=key: self._inflight.pop(k, None))
+            if owner:
+                self._chain(self._submit(key, payload), running)
+        else:
+            running = self._submit(key, payload)
+        done: "Future[WhatIfAnswer]" = Future()
+
+        def _relay(f: Future) -> None:
+            e = f.exception()
+            if e is not None:
+                done.set_exception(e)
+            else:
+                done.set_result(self._stamp(f.result(), "engine", t0))
+        running.add_done_callback(_relay)
+        return done
+
+    @staticmethod
+    def _chain(src: Future, dst: Future) -> None:
+        def _copy(f: Future) -> None:
+            e = f.exception()
+            if e is not None:
+                dst.set_exception(e)
+            else:
+                dst.set_result(f.result())
+        src.add_done_callback(_copy)
+
+    def _submit(self, key: str, payload: Tuple[Scenario, int]) -> Future:
+        if self._coalescer is not None:
+            return self._coalescer.submit(key, payload)
+        fut: Future = Future()
+        try:
+            fut.set_result(self._run_batch([(key, payload)])[key])
+        except BaseException as e:                 # noqa: BLE001
+            fut.set_exception(e)
+        return fut
+
+    def _run_batch(self, batch: List[Tuple[str, Tuple[Scenario, int]]]
+                   ) -> Dict[str, WhatIfAnswer]:
+        """One coalesced dispatch: group the window's distinct queries by
+        seed count (the engine's seed axis is shared per pass), run each
+        group as ONE stacked call, demultiplex per-key distributions."""
+        by_seeds: Dict[int, List[Tuple[str, Scenario]]] = {}
+        for key, (scenario, n) in batch:
+            by_seeds.setdefault(n, []).append((key, scenario))
+        out: Dict[str, WhatIfAnswer] = {}
+        for n, items in sorted(by_seeds.items()):
+            cfgs = [sc.to_campaign_config(0) for _, sc in items]
+            self.n_engine_configs += len(cfgs)
+            per_cfg = self._engine_fn(cfgs, list(range(n)))
+            for (key, sc), by_seed in zip(items, per_cfg):
+                ans = WhatIfAnswer(
+                    scenario=sc.name, key=key, n_seeds=n, source="engine",
+                    distribution=findings_distribution(
+                        list(by_seed.values())),
+                    distributional=n >= MIN_DIST_SEEDS)
+                self.cache.put(key, ans)
+                out[key] = ans
+        return out
+
+    @staticmethod
+    def _stamp(ans: WhatIfAnswer, source: str, t0: float) -> WhatIfAnswer:
+        """Per-request copy: the cached/shared answer object stays
+        immutable, each caller gets its own provenance + latency."""
+        return WhatIfAnswer(
+            scenario=ans.scenario, key=ans.key, n_seeds=ans.n_seeds,
+            source=source, distribution=ans.distribution,
+            distributional=ans.distributional,
+            wall_s=time.perf_counter() - t0, meta=ans.meta)

@@ -1,0 +1,274 @@
+"""Precomputed what-if sweep surfaces with multilinear interpolation.
+
+The service's cheapest answer path after the cache: the preset grid —
+node count x failure-mix tilt x checkpoint cadence around a base
+scenario — is evaluated offline into dense per-metric distribution
+surfaces (one stacked engine pass per node count, via
+`run_findings_stacked`).  A query that differs from the base scenario
+*only* along those three axes and lands inside the grid is answered by
+multilinear interpolation in microseconds; everything else — off-grid
+axes, out-of-hull coordinates, or an interpolation error estimate above
+the spec's bound — falls back to a live engine pass.
+
+Interpolated answers are estimates, not simulations: the service labels
+them ``source="surface"`` and never mixes them into the bitwise-parity
+engine path.  The error estimate is the standard linear-interpolation
+curvature bound |f''| h^2 / 8, read off the grid's own second
+differences of the goodput median along each axis (axes with only two
+points carry no curvature information and contribute zero — size such
+axes to three points when the bound matters).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.ops.scenario import Scenario
+from repro.ops.sweep import findings_distribution
+
+__all__ = ["SurfaceSpec", "SweepSurface"]
+
+# the distribution fields interpolated per metric (n is carried verbatim)
+_STAT_FIELDS = ("mean", "median", "q25", "q75", "ci_lo", "ci_hi")
+
+
+@dataclass
+class SurfaceSpec:
+    """The preset grid: which three axes vary, over which values.
+
+    * ``n_nodes`` — cluster sizes; the gang size follows with the base
+      scenario's spare count (``job_nodes = n_nodes - spares``);
+    * ``tilts`` — multiplicative ``kind_weights`` tilt applied to
+      ``tilt_kind`` (1.0 = the base mix);
+    * ``ckpt_hours`` — fixed checkpoint cadence values (the base
+      scenario must use ``checkpoint_strategy="fixed"``);
+    * ``seeds`` — Monte Carlo seeds per grid point;
+    * ``max_goodput_err`` — interpolation error bound on the goodput
+      median above which the service falls back to a live pass.
+    """
+
+    base: Scenario
+    n_nodes: Tuple[int, ...] = (31, 63, 127)
+    tilt_kind: str = "nvlink"
+    tilts: Tuple[float, ...] = (1.0, 2.0, 4.0)
+    ckpt_hours: Tuple[float, ...] = (1.0, 2.23, 4.0)
+    seeds: int = 16
+    max_goodput_err: float = 0.02
+
+    def __post_init__(self):
+        self.n_nodes = tuple(self.n_nodes)
+        self.tilts = tuple(float(t) for t in self.tilts)
+        self.ckpt_hours = tuple(float(c) for c in self.ckpt_hours)
+        for name, ax in (("n_nodes", self.n_nodes), ("tilts", self.tilts),
+                         ("ckpt_hours", self.ckpt_hours)):
+            if len(ax) < 2 or any(b <= a for a, b in zip(ax, ax[1:])):
+                raise ValueError(
+                    f"surface axis {name} must be >=2 strictly "
+                    f"ascending values, got {ax}")
+        if self.base.checkpoint_strategy != "fixed":
+            raise ValueError(
+                "surface cadence axis needs checkpoint_strategy='fixed' "
+                f"(base uses {self.base.checkpoint_strategy!r})")
+        spares = self.base.n_nodes - self.base.job_nodes
+        if self.n_nodes[0] <= spares:
+            raise ValueError(
+                f"n_nodes axis starts at {self.n_nodes[0]} but the base "
+                f"scenario keeps {spares} spares")
+
+    def point(self, nv: int, tilt: float, ckpt_h: float) -> Scenario:
+        """The scenario at one grid point."""
+        spares = self.base.n_nodes - self.base.job_nodes
+        kw = dict(self.base.kind_weights or {})
+        kw[self.tilt_kind] = tilt
+        return self.base.replace(
+            name=f"{self.base.name}@{nv}n/{tilt:g}x/{ckpt_h:g}h",
+            n_nodes=int(nv), job_nodes=int(nv) - spares,
+            kind_weights=kw, checkpoint_interval_h=float(ckpt_h))
+
+
+class SweepSurface:
+    """Dense distribution surfaces over a `SurfaceSpec` grid."""
+
+    def __init__(self, spec: SurfaceSpec,
+                 wavefront_backend: str = "auto"):
+        self.spec = spec
+        self.wavefront_backend = wavefront_backend
+        self.shape = (len(spec.n_nodes), len(spec.tilts),
+                      len(spec.ckpt_hours))
+        # metric -> stat field -> grid ndarray (nan where not applicable)
+        self.values: Dict[str, Dict[str, np.ndarray]] = {}
+        self.built = False
+        self.build_wall_s = 0.0
+        self._axes = (np.asarray(spec.n_nodes, dtype=float),
+                      np.asarray(spec.tilts, dtype=float),
+                      np.asarray(spec.ckpt_hours, dtype=float))
+        # residual check: a query is surface-shaped iff resetting the
+        # three axis fields to the base's values reproduces the base key
+        self._base_key = spec.base.canonical_key()
+
+    # -- offline build ------------------------------------------------------
+
+    def build(self, engine_fn=None) -> "SweepSurface":
+        """Evaluate every grid point (one stacked pass per node count —
+        grid scenarios are control-free iff the base is; the engine
+        groups them, see `run_findings_stacked`)."""
+        from repro.core.batch import run_findings_stacked
+        if engine_fn is None:
+            def engine_fn(cfgs, seeds):
+                return run_findings_stacked(
+                    cfgs, seeds, wavefront_backend=self.wavefront_backend)
+        t0 = time.perf_counter()
+        spec = self.spec
+        points = list(itertools.product(spec.n_nodes, spec.tilts,
+                                        spec.ckpt_hours))
+        cfgs = [spec.point(*p).to_campaign_config(0) for p in points]
+        per_cfg = engine_fn(cfgs, list(range(spec.seeds)))
+        dists = [findings_distribution(list(by_seed.values()))
+                 for by_seed in per_cfg]
+        metrics = sorted({m for d in dists for m in d})
+        for m in metrics:
+            self.values[m] = {
+                f: np.full(self.shape, np.nan) for f in _STAT_FIELDS}
+        for flat, d in enumerate(dists):
+            idx = np.unravel_index(flat, self.shape)
+            for m, st in d.items():
+                for f in _STAT_FIELDS:
+                    self.values[m][f][idx] = st[f]
+        self.built = True
+        self.build_wall_s = time.perf_counter() - t0
+        return self
+
+    # -- query side ---------------------------------------------------------
+
+    def coords(self, scenario: Scenario) -> Optional[Tuple[float, ...]]:
+        """Grid coordinates for a surface-shaped query, else None.
+
+        Surface-shaped means: identical to the base scenario on every
+        non-axis field (canonical residual check), gang size keeping the
+        base's spare count, fixed-cadence checkpointing, non-tilt kind
+        weights matching the base, and all three axis values inside the
+        grid hull.
+        """
+        spec = self.spec
+        if scenario.checkpoint_strategy != "fixed":
+            return None
+        spares = spec.base.n_nodes - spec.base.job_nodes
+        if scenario.n_nodes - scenario.job_nodes != spares:
+            return None
+        kw = {k: v for k, v in (scenario.kind_weights or {}).items()
+              if v != 1.0}
+        tilt = kw.pop(spec.tilt_kind, 1.0)
+        base_kw = {k: v for k, v in (spec.base.kind_weights or {}).items()
+                   if v != 1.0 and k != spec.tilt_kind}
+        if kw != base_kw:
+            return None
+        probe = scenario.replace(
+            n_nodes=spec.base.n_nodes, job_nodes=spec.base.job_nodes,
+            kind_weights=spec.base.kind_weights,
+            checkpoint_interval_h=spec.base.checkpoint_interval_h)
+        if probe.canonical_key() != self._base_key:
+            return None
+        q = (float(scenario.n_nodes), float(tilt),
+             float(scenario.checkpoint_interval_h))
+        for v, ax in zip(q, self._axes):
+            if not (ax[0] <= v <= ax[-1]):
+                return None
+        return q
+
+    def _cell(self, q: Sequence[float]) -> Tuple[List[int], List[float]]:
+        """Lower corner index + fractional offset per axis."""
+        lo, frac = [], []
+        for v, ax in zip(q, self._axes):
+            i = int(np.searchsorted(ax, v, side="right") - 1)
+            i = min(max(i, 0), len(ax) - 2)
+            t = (v - ax[i]) / (ax[i + 1] - ax[i])
+            lo.append(i)
+            frac.append(float(t))
+        return lo, frac
+
+    def _interp(self, grid: np.ndarray, lo: List[int],
+                frac: List[float]) -> float:
+        acc = 0.0
+        for corner in itertools.product((0, 1), repeat=len(lo)):
+            w = 1.0
+            for c, t in zip(corner, frac):
+                w *= t if c else 1.0 - t
+            if w == 0.0:
+                continue
+            v = grid[tuple(i + c for i, c in zip(lo, corner))]
+            if np.isnan(v):
+                return float("nan")
+            acc += w * v
+        return float(acc)
+
+    def error_estimate(self, q: Sequence[float]) -> float:
+        """Linear-interpolation error bound on the goodput median at
+        ``q``: sum over axes of |second difference| / 8 at the nearest
+        grid lines (exactly 0 on grid nodes; 0 contribution from 2-point
+        axes, which carry no curvature information)."""
+        g = self.values.get("goodput", {}).get("median")
+        if g is None:
+            return 0.0
+        lo, frac = self._cell(q)
+        nearest = [i + (1 if t > 0.5 else 0) for i, t in zip(lo, frac)]
+        if all(t in (0.0, 1.0) for t in frac):
+            return 0.0
+        err = 0.0
+        for ax in range(len(lo)):
+            n_ax = g.shape[ax]
+            if n_ax < 3:
+                continue
+            c = min(max(nearest[ax], 1), n_ax - 2)
+            idx = list(nearest)
+            vals = []
+            for off in (-1, 0, 1):
+                idx[ax] = c + off
+                vals.append(g[tuple(idx)])
+            if any(np.isnan(v) for v in vals):
+                continue
+            err += abs(vals[0] - 2.0 * vals[1] + vals[2]) / 8.0
+        return err
+
+    def lookup(self, scenario: Scenario) -> Optional[dict]:
+        """Interpolated distribution answer for a surface-shaped query
+        within the error bound; None -> the caller runs a live pass."""
+        if not self.built:
+            return None
+        q = self.coords(scenario)
+        if q is None:
+            return None
+        err = self.error_estimate(q)
+        if err > self.spec.max_goodput_err:
+            return None
+        lo, frac = self._cell(q)
+        dist: Dict[str, dict] = {}
+        for m, fields in self.values.items():
+            st = {f: self._interp(fields[f], lo, frac)
+                  for f in _STAT_FIELDS}
+            if any(np.isnan(v) for v in st.values()):
+                continue
+            st["n"] = self.spec.seeds
+            dist[m] = st
+        return {"distribution": dist, "coords": list(q),
+                "interp_err_goodput": err}
+
+    def info(self) -> dict:
+        """Metadata for the ``/surface`` endpoint."""
+        spec = self.spec
+        return {
+            "built": self.built,
+            "base": spec.base.name,
+            "base_key": self._base_key,
+            "axes": {"n_nodes": list(spec.n_nodes),
+                     f"tilt[{spec.tilt_kind}]": list(spec.tilts),
+                     "ckpt_hours": list(spec.ckpt_hours)},
+            "grid_points": int(np.prod(self.shape)),
+            "seeds_per_point": spec.seeds,
+            "max_goodput_err": spec.max_goodput_err,
+            "metrics": sorted(self.values),
+            "build_wall_s": self.build_wall_s,
+        }
